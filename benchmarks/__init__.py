@@ -1,0 +1,1 @@
+"""One benchmark module per paper table/figure; ``python -m benchmarks.run``."""

@@ -1,0 +1,37 @@
+"""Figure 2b: software vs hardware barrier runtime and scaling slopes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.noc import model as m
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.topology import Coord, Mesh2D
+
+
+def rows():
+    p = PAPER_MICRO
+    out = []
+    mesh = Mesh2D(8, 4)
+    sim = NoCSim(mesh, p)
+    counter = Coord(0, 0)
+    sim_pts_sw, sim_pts_hw, cs = [], [], []
+    for c in (2, 4, 8, 16, 32):
+        t_sw = m.barrier_sw(p, c)
+        t_hw = m.barrier_hw(p, c)
+        parts = [Coord(i % 8, i // 8) for i in range(c)]
+        s_sw = sim.barrier_sw(parts, counter)
+        s_hw = sim.barrier_hw(parts, counter)
+        cs.append(c)
+        sim_pts_sw.append(s_sw)
+        sim_pts_hw.append(s_hw)
+        out.append((f"barrier_sw_model_c{c}", t_sw / 1e3, t_sw))
+        out.append((f"barrier_hw_model_c{c}", t_hw / 1e3, t_hw))
+        out.append((f"barrier_sw_netsim_c{c}", s_sw / 1e3, s_sw))
+        out.append((f"barrier_hw_netsim_c{c}", s_hw / 1e3, s_hw))
+    slope_sw = np.polyfit(cs, sim_pts_sw, 1)[0]
+    slope_hw = np.polyfit(cs, sim_pts_hw, 1)[0]
+    out.append(("barrier_slope_sw_netsim(paper:3.3)", 0.0, round(float(slope_sw), 2)))
+    out.append(("barrier_slope_hw_netsim(paper:1.3)", 0.0, round(float(slope_hw), 2)))
+    return out

@@ -1,0 +1,14 @@
+"""The full paper-claim validation table (calibrate.py) as benchmark rows."""
+
+from __future__ import annotations
+
+from repro.core.noc.calibrate import all_claims
+
+
+def rows():
+    out = []
+    for c in all_claims():
+        status = "PASS" if c.ok else "FAIL"
+        out.append((f"claim::{c.name}", 0.0,
+                    f"paper={c.paper_value} ours={c.achieved:.3f} {status}"))
+    return out

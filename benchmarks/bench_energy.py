@@ -1,0 +1,21 @@
+"""Table 1 + Figure 10: primitive counts and energy savings vs mesh size."""
+
+from __future__ import annotations
+
+from repro.core.noc import energy as e
+
+
+def rows():
+    out = []
+    t1 = e.table1(16)
+    for row_name, cols in t1.items():
+        for col, val in cols.items():
+            if val:
+                out.append((f"table1_{row_name.replace(' ', '_')}_{col}", 0.0,
+                            round(val, 1)))
+    for s in (4, 8, 16, 32, 64, 128, 256):
+        out.append((f"energy_summa_saving_s{s}", 0.0, round(e.summa_saving(s), 3)))
+        out.append((f"energy_fcl_saving_s{s}", 0.0, round(e.fcl_saving(s), 3)))
+    out.append(("energy_summa_max(paper:1.17)", 0.0, round(e.summa_saving(256), 3)))
+    out.append(("energy_fcl_max(paper:1.13)", 0.0, round(e.fcl_saving(256), 3)))
+    return out

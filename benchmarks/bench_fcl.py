@@ -1,0 +1,19 @@
+"""Figure 9b: FusedConcatLinear GEMM reduction speedup across mesh sizes."""
+
+from __future__ import annotations
+
+from repro.core.noc import model as m
+from repro.core.noc.params import PAPER_GEMM
+
+
+def rows():
+    p = PAPER_GEMM
+    out = []
+    for mesh, speedup in m.fcl_sweep(p):
+        pt = m.fcl_point(p, mesh)
+        out.append((f"fcl_s{mesh}_total_sw", pt.t_comm_sw / 1e3, ""))
+        out.append((f"fcl_s{mesh}_total_hw", pt.t_comm_hw / 1e3, ""))
+        out.append((f"fcl_s{mesh}_speedup", 0.0, round(speedup, 2)))
+    out.append(("fcl_max_speedup(paper:2.4)", 0.0,
+                round(max(s for _, s in m.fcl_sweep(p)), 2)))
+    return out

@@ -1,0 +1,71 @@
+"""Pallas kernel micro-bench: correctness vs oracle + host-side timing.
+
+Kernels run in interpret mode on CPU (the container has no TPU), so the
+reported µs are for the jnp ORACLE path — the interpret-mode kernel is a
+correctness artifact, not a performance proxy.  ``derived`` reports the
+max-abs error of the kernel vs the oracle.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gemm import gemm
+from repro.kernels.reduce_nway import reduce_nway
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.rwkv6 import wkv
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _err(a, b):
+    return float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+
+
+def rows():
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    a = jax.random.normal(key, (256, 256), jnp.float32)
+    b = jax.random.normal(key, (256, 256), jnp.float32)
+    ref_fn = jax.jit(ref.gemm_ref)
+    out.append(("gemm_256_oracle", round(_time(ref_fn, a, b), 1),
+                _err(gemm(a, b, bm=128, bn=128, bk=128), ref_fn(a, b))))
+
+    q = jax.random.normal(key, (4, 256, 64), jnp.float32) * 0.5
+    fa_ref = jax.jit(ref.flash_attention_ref)
+    out.append(("flash_attn_4x256x64_oracle", round(_time(fa_ref, q, q, q), 1),
+                _err(flash_attention(q, q, q, bq=128, bkv=128), fa_ref(q, q, q))))
+
+    x = jax.random.normal(key, (8, 4096), jnp.float32)
+    rn_ref = jax.jit(lambda v: ref.reduce_nway_ref(v, "add"))
+    out.append(("reduce_nway_8x4096_oracle", round(_time(rn_ref, x), 1),
+                _err(reduce_nway(x, op="add", bs=512), rn_ref(x))))
+
+    aa = jax.nn.sigmoid(jax.random.normal(key, (4, 256, 64)))
+    bb = jax.random.normal(key, (4, 256, 64))
+    rg_ref = jax.jit(ref.rglru_scan_ref)
+    out.append(("rglru_4x256x64_oracle", round(_time(rg_ref, aa, bb), 1),
+                _err(rglru_scan(aa, bb, chunk=128), rg_ref(aa, bb))))
+
+    r = jax.random.normal(key, (4, 128, 32)) * 0.5
+    lw = -jnp.exp(jnp.clip(jax.random.normal(key, (4, 128, 32)) - 2, -8, 1))
+    u = jax.random.normal(key, (4, 32)) * 0.5
+    wk_ref = jax.jit(ref.wkv_ref)
+    out.append(("rwkv6_wkv_4x128x32_oracle", round(_time(wk_ref, r, r, r, lw, u), 1),
+                _err(wkv(r, r, r, lw, u, chunk=64), wk_ref(r, r, r, lw, u))))
+    return out

@@ -1,0 +1,63 @@
+"""Figures 5a/5b/5c: multicast runtimes — SW schedules vs in-network HW.
+
+Also cross-validates the analytical models against the flit-level
+simulator, mirroring the paper's model-vs-RTL-measurement validation.
+"""
+
+from __future__ import annotations
+
+from repro.core.noc import model as m
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.topology import Coord, Mesh2D, Submesh
+
+KIB = 1024
+SIZES = [1 * KIB, 2 * KIB, 4 * KIB, 8 * KIB, 16 * KIB, 32 * KIB]
+
+
+def rows():
+    p = PAPER_MICRO
+    out = []
+    # Fig 5a: 1-D multicast, c=4
+    for size in SIZES:
+        n = p.beats(size)
+        naive = m.multicast_naive(p, n, 4)
+        seq = m.multicast_seq(p, n, 4)
+        tree = m.multicast_tree(p, n, 4)
+        hw = m.multicast_hw(p, n, 4)
+        sw = min(seq, tree)
+        out.append((f"mcast1d_{size//KIB}k_naive", naive / 1e3, naive))
+        out.append((f"mcast1d_{size//KIB}k_seq", seq / 1e3, seq))
+        out.append((f"mcast1d_{size//KIB}k_tree", tree / 1e3, tree))
+        out.append((f"mcast1d_{size//KIB}k_hw", hw / 1e3, hw))
+        out.append((f"mcast1d_{size//KIB}k_speedup", 0.0, round(sw / hw, 2)))
+    # Fig 5b: T_seq -> T_hw as per-stage overhead -> 0
+    n = p.beats(32 * KIB)
+    for alpha_delta in (0, 8, 32, 128):
+        import dataclasses
+
+        p2 = dataclasses.replace(p, alpha0=float(alpha_delta), delta=0.0,
+                                 hop_cycles=0.0)
+        t = m.multicast_seq(p2, n, 4)
+        out.append((f"mcast_seq_limit_ad{alpha_delta}", t / 1e3, t))
+    out.append(("mcast_hw_32k(limit target)", m.multicast_hw(p, n, 4) / 1e3,
+                m.multicast_hw(p, n, 4)))
+    # Fig 5c: 2-D multicast at 32 KiB, rows r in {1, 2, 4}
+    for r in (1, 2, 4):
+        sw = m.multicast_sw_best(p, n, 4, r)
+        hw = m.multicast_hw(p, n, 4, r)
+        out.append((f"mcast2d_r{r}_sw", sw / 1e3, sw))
+        out.append((f"mcast2d_r{r}_hw", hw / 1e3, hw))
+    # model vs flit-level simulator (hw path, 4x4 mesh)
+    mesh = Mesh2D(4, 4)
+    for size in (1 * KIB, 32 * KIB):
+        sim = NoCSim(mesh, p)
+        sim.add_multicast(Coord(0, 0), Submesh(0, 0, 4, 1).multi_address(), size)
+        t_sim = sim.run()
+        t_model = m.multicast_hw(p, p.beats(size), 4, 1)
+        out.append((f"mcast_netsim_vs_model_{size//KIB}k", t_sim / 1e3,
+                    round(t_sim / t_model, 3)))
+    geo = m.geomean([m.multicast_sw_best(p, p.beats(s), 4) /
+                     m.multicast_hw(p, p.beats(s), 4) for s in SIZES])
+    out.append(("mcast_1d_geomean_speedup(paper:2.3-3.2 range)", 0.0, round(geo, 2)))
+    return out

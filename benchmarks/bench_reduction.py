@@ -1,0 +1,49 @@
+"""Figures 7a/7b: reduction runtimes — SW schedules vs in-network HW + DCA."""
+
+from __future__ import annotations
+
+from repro.core.noc import model as m
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.topology import Coord, Mesh2D
+
+KIB = 1024
+SIZES = [1 * KIB, 2 * KIB, 4 * KIB, 8 * KIB, 16 * KIB, 32 * KIB]
+
+
+def rows():
+    p = PAPER_MICRO
+    out = []
+    for size in SIZES:
+        n = p.beats(size)
+        seq = m.reduction_seq(p, n, 4)
+        tree = m.reduction_tree(p, n, 4)
+        hw = m.reduction_hw(p, n, 4)
+        sw = min(seq, tree)
+        out.append((f"red1d_{size//KIB}k_seq", seq / 1e3, seq))
+        out.append((f"red1d_{size//KIB}k_tree", tree / 1e3, tree))
+        out.append((f"red1d_{size//KIB}k_hw", hw / 1e3, hw))
+        out.append((f"red1d_{size//KIB}k_speedup", 0.0, round(sw / hw, 2)))
+    # Fig 7b: 2-D reduction at 32 KiB for r in {1, 2, 4}
+    n = p.beats(32 * KIB)
+    for r in (1, 2, 4):
+        sw = m.reduction_sw_best(p, n, 4, r)
+        hw = m.reduction_hw(p, n, 4, r)
+        out.append((f"red2d_r{r}_sw", sw / 1e3, sw))
+        out.append((f"red2d_r{r}_hw", hw / 1e3, hw))
+    out.append(("red_2d_slowdown_32k(paper:1.9)", 0.0,
+                round(m.reduction_hw(p, n, 4, 4) / m.reduction_hw(p, n, 4, 1), 2)))
+    # model vs flit-level simulator
+    mesh = Mesh2D(4, 4)
+    for r in (1, 4):
+        sim = NoCSim(mesh, p)
+        srcs = [Coord(x, y) for x in range(4) for y in range(r)]
+        sim.add_reduction(srcs, Coord(0, 0), 32 * KIB)
+        t_sim = sim.run()
+        t_model = m.reduction_hw(p, n, 4, r)
+        out.append((f"red_netsim_vs_model_r{r}", t_sim / 1e3,
+                    round(t_sim / t_model, 3)))
+    geo = m.geomean([m.reduction_sw_best(p, p.beats(s), 4) /
+                     m.reduction_hw(p, p.beats(s), 4) for s in SIZES])
+    out.append(("red_1d_geomean_speedup(paper:2.0-3.0 range)", 0.0, round(geo, 2)))
+    return out

@@ -1,0 +1,204 @@
+"""Regenerate EXPERIMENTS.md from results/dryrun.json + the claim table.
+
+  PYTHONPATH=src python -m benchmarks.report
+
+§Perf is included verbatim from results/perf_log.md (the hand-written
+hypothesis -> change -> measure log).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results"
+
+GIB = 2**30
+HBM_PER_CHIP = 16 * GIB  # v5e
+
+
+def _fmt_bytes(b):
+    return f"{b / GIB:.2f}"
+
+
+def _load():
+    path = RESULTS / "dryrun.json"
+    return json.loads(path.read_text()) if path.exists() else []
+
+
+def _get(recs, arch, shape, mesh, variant):
+    for r in recs:
+        if (r["arch"], r["shape"], r["mesh"], r.get("variant")) == (arch, shape, mesh, variant):
+            return r
+    return None
+
+
+def claims_section() -> str:
+    from repro.core.noc.calibrate import all_claims
+
+    lines = ["| claim | paper | ours | status |", "|---|---|---|---|"]
+    n_pass = 0
+    claims = all_claims()
+    for c in claims:
+        n_pass += c.ok
+        lines.append(f"| {c.name} | {c.paper_value:g} | {c.achieved:.3f} | "
+                     f"{'PASS' if c.ok else 'FAIL'} |")
+    head = (f"\n## §Claims — paper-faithfulness gate ({n_pass}/{len(claims)} pass)\n\n"
+            "Every numeric claim in the paper vs. our reproduced models "
+            "(tests/test_noc_claims.py asserts each row):\n\n")
+    return head + "\n".join(lines) + "\n"
+
+
+def dryrun_section(recs) -> str:
+    from repro.configs import ARCH_IDS, get_config
+    from repro.launch.shapes import SHAPES, applicable
+
+    lines = [
+        "| arch | shape | 16x16 compile | GiB/dev (scan) | 2x16x16 compile | GiB/dev (multi-pod) |",
+        "|---|---|---|---|---|---|",
+    ]
+    n_ok = n_total = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = applicable(cfg, shape)
+            if not ok:
+                lines.append(f"| {arch} | {shape} | SKIP | — | SKIP | — |")
+                continue
+            n_total += 1
+            s1 = _get(recs, arch, shape, "16x16", "compile-scan")
+            s2 = _get(recs, arch, shape, "2x16x16", "compile-scan")
+
+            def cell(r):
+                if r is None:
+                    return "(pending)", "—"
+                if r["status"] != "ok":
+                    return f"FAIL: {r.get('error', '?')[:40]}", "—"
+                return f"OK ({r['compile_s']}s)", _fmt_bytes(r["bytes_per_device"])
+
+            c1, m1 = cell(s1)
+            c2, m2 = cell(s2)
+            if s1 and s1["status"] == "ok" and s2 and s2["status"] == "ok":
+                n_ok += 1
+            lines.append(f"| {arch} | {shape} | {c1} | {m1} | {c2} | {m2} |")
+    head = (f"\n## §Dry-run — lower+compile on the production meshes "
+            f"({n_ok}/{n_total} runnable cells green on both meshes)\n\n"
+            "Every runnable (arch x shape) compiles on the single-pod (16,16)\n"
+            "and multi-pod (2,16,16) meshes (512 placeholder host devices).\n"
+            "`GiB/dev` is `memory_analysis` of the production (scanned)\n"
+            "lowering: arguments + temps + output − donated aliases.  The 7\n"
+            "skipped cells are long_500k on pure full-attention archs (see\n"
+            "DESIGN.md §Arch-applicability).\n\n")
+    return head + "\n".join(lines) + "\n"
+
+
+def roofline_section(recs) -> str:
+    from repro.configs import ARCH_IDS, get_config
+    from repro.launch.shapes import SHAPES, applicable
+
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck | "
+        "6ND/HLO | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    levers = {
+        "memory": "cut activation/logits materialization (blockwise attention, "
+                  "smaller loss chunk, fused epilogues)",
+        "collective": "resharding schedule: reduce-scatter instead of all-reduce, "
+                      "cache-layout-aligned decode, overlapped collective matmul",
+        "compute": "raise MXU utilization: larger per-device tiles, fewer remat "
+                   "recomputes",
+    }
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, _ = applicable(cfg, shape)
+            if not ok:
+                continue
+            r = _get(recs, arch, shape, "16x16", "baseline")
+            if r is None or r["status"] != "ok":
+                status = "(pending)" if r is None else "FAIL"
+                lines.append(f"| {arch} | {shape} | {status} | | | | | | |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {r['t_compute']:.3g} | {r['t_memory']:.3g} "
+                f"| {r['t_collective']:.3g} | {r['bottleneck']} "
+                f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+                f"| {levers[r['bottleneck']]} |")
+    head = ("\n## §Roofline — per-cell terms from the compiled dry-run "
+            "(single-pod 16x16, 256 chips)\n\n"
+            "Terms per step, from the UNROLLED lowering (exact loop-body "
+            "accounting):\n"
+            "`t_comp = HLO_FLOPs/(chips*197 TF/s)`, `t_mem = HLO_bytes/"
+            "(chips*819 GB/s)`, `t_coll = collective_bytes/(chips*50 GB/s)`. \n"
+            "`6ND/HLO` = MODEL_FLOPS (6*N_active*D train, 2*N_active*D serve) "
+            "over compiled FLOPs — <1 means remat/dispatch overhead, the gap "
+            "is recompute + attention's non-6ND FLOPs.  `roofline frac` = "
+            "t_comp/max(terms); 1.0 = compute-bound (the goal).\n\n")
+    return head + "\n".join(lines) + "\n"
+
+
+def collective_detail_section(recs) -> str:
+    lines = ["| arch | shape | collective bytes (global) | breakdown |",
+             "|---|---|---|---|"]
+    for r in recs:
+        if r.get("variant") == "baseline" and r.get("status") == "ok":
+            br = ", ".join(f"{k}={v/2**30:.1f}GiB" for k, v in
+                           sorted(r.get("coll_breakdown", {}).items()))
+            lines.append(f"| {r['arch']} | {r['shape']} | "
+                         f"{r['coll_bytes']/2**30:.1f} GiB | {br} |")
+    return ("\n### Collective schedule detail (baseline)\n\n"
+            + "\n".join(lines) + "\n")
+
+
+def variants_section(recs) -> str:
+    lines = ["| arch | shape | variant | t_comp | t_mem | t_coll | 6ND/HLO | GiB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        v = r.get("variant", "")
+        if v in ("baseline", "compile-scan") or r.get("status") != "ok":
+            continue
+        gib = r.get("bytes_per_device", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {v} | {r.get('t_compute', 0):.3g} "
+            f"| {r.get('t_memory', 0):.3g} | {r.get('t_collective', 0):.3g} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} | {gib:.1f} |")
+    return ("\n### Hill-climb variant records (raw; analysis in §Perf)\n\n"
+            + "\n".join(lines) + "\n")
+
+
+def perf_section() -> str:
+    p = RESULTS / "perf_log.md"
+    body = p.read_text() if p.exists() else "_(perf log pending)_\n"
+    return "\n## §Perf — hypothesis → change → measure log\n\n" + body
+
+
+def header() -> str:
+    return (
+        "# EXPERIMENTS\n\n"
+        "Reproduction + scale-out evaluation of *\"A Lightweight "
+        "High-Throughput Collective-Capable NoC for Large-Scale ML "
+        "Accelerators\"*.\n\n"
+        "Structure: §Claims validates the paper's own numbers against our "
+        "models/simulator (the faithful reproduction); §Dry-run proves every "
+        "assigned (arch x shape) compiles on the production meshes; §Roofline "
+        "derives the three terms per cell; §Perf is the hill-climb log "
+        "(baseline vs beyond-paper optimizations, recorded separately).\n"
+        "Benchmarks: `PYTHONPATH=src python -m benchmarks.run` (one module "
+        "per paper figure/table).  Regenerate this file: "
+        "`PYTHONPATH=src python -m benchmarks.report`.\n"
+    )
+
+
+def main():
+    recs = _load()
+    out = (header() + claims_section() + dryrun_section(recs)
+           + roofline_section(recs) + collective_detail_section(recs)
+           + variants_section(recs) + perf_section())
+    (ROOT / "EXPERIMENTS.md").write_text(out)
+    print(f"wrote EXPERIMENTS.md ({len(out)} bytes, {len(recs)} dry-run records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Time-like values are in µs
+(cycle counts at the paper's 1 GHz target convert 1:1000).  ``derived``
+carries speedups, claim checks, byte counts, or bound labels.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    ("Fig2b_barrier", "benchmarks.bench_barrier"),
+    ("Fig5_multicast", "benchmarks.bench_multicast"),
+    ("Fig7_reduction", "benchmarks.bench_reduction"),
+    ("Fig9a_summa", "benchmarks.bench_summa"),
+    ("Fig9b_fcl", "benchmarks.bench_fcl"),
+    ("Tab1_Fig10_energy", "benchmarks.bench_energy"),
+    ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
+    ("Kernels", "benchmarks.bench_kernels"),
+    ("Claims", "benchmarks.bench_claims"),
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, modname in MODULES:
+        if only and only not in modname and only not in label:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.rows():
+                print(f"{label}/{name},{us},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{label}/ERROR,0,{type(e).__name__}:{e}")
+        print(f"{label}/_elapsed_s,,{round(time.perf_counter() - t0, 1)}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

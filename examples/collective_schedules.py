@@ -1,0 +1,41 @@
+"""Explore the paper's collective schedules: models, simulator, and the
+schedule auto-chooser.
+
+  PYTHONPATH=src python examples/collective_schedules.py
+"""
+
+from repro.core.collectives import choose_schedule
+from repro.core.noc import model as m
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.topology import Coord, Mesh2D, Submesh
+
+
+def main():
+    p = PAPER_MICRO
+    print("1-D multicast to 4 clusters (cycles):")
+    print(f"{'size':>8} {'naive':>8} {'seq':>8} {'tree':>8} {'hw':>8} {'speedup':>8} {'chosen':>10}")
+    for kib in (1, 2, 4, 8, 16, 32):
+        n = p.beats(kib * 1024)
+        naive = m.multicast_naive(p, n, 4)
+        seq = m.multicast_seq(p, n, 4)
+        tree = m.multicast_tree(p, n, 4)
+        hw = m.multicast_hw(p, n, 4)
+        print(f"{kib:>6}Ki {naive:8.0f} {seq:8.0f} {tree:8.0f} {hw:8.0f} "
+              f"{min(seq, tree)/hw:8.2f} {choose_schedule(kib*1024, 4):>10}")
+
+    print("\nflit-level simulation, 4x4 mesh, 32 KiB multicast to the full mesh:")
+    sim = NoCSim(Mesh2D(4, 4), p)
+    sim.add_multicast(Coord(0, 0), Submesh(0, 0, 4, 4).multi_address(), 32 * 1024)
+    t = sim.run()
+    print(f"  simulator: {t} cycles; model: "
+          f"{m.multicast_hw(p, p.beats(32*1024), 4, 4):.0f} cycles")
+
+    print("\n2-D reduction join fan-in (the paper's 1.9x observation):")
+    for r in (1, 2, 4):
+        hw = m.reduction_hw(p, p.beats(32 * 1024), 4, r)
+        print(f"  rows={r}: {hw:.0f} cycles")
+
+
+if __name__ == "__main__":
+    main()

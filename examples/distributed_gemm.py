@@ -1,0 +1,71 @@
+"""SUMMA + FusedConcatLinear on real (host) devices with every schedule.
+
+Run with multiple host devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/distributed_gemm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcl import fcl_sharded
+from repro.core.overlap import ag_matmul_sharded, matmul_rs_sharded
+from repro.core.summa import summa_sharded
+
+
+def main():
+    n_dev = jax.device_count()
+    print(f"{n_dev} devices")
+    if n_dev >= 4:
+        side = 2
+        mesh = jax.make_mesh((side, side), ("row", "col"),
+                             devices=jax.devices()[: side * side],
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        A = jax.random.normal(jax.random.PRNGKey(0), (512, 512), jnp.float32)
+        B = jax.random.normal(jax.random.PRNGKey(1), (512, 512), jnp.float32)
+        ref = np.asarray(A @ B)
+        print("\nSUMMA GEMM (512^3) on a 2x2 grid:")
+        for sched in ("native", "chain", "pipelined", "tree", "ring"):
+            with jax.set_mesh(mesh):
+                fn = jax.jit(lambda a, b, s=sched: summa_sharded(
+                    a, b, mesh, "row", "col", schedule=s))
+                C = fn(A, B)
+                C.block_until_ready()
+                t0 = time.perf_counter()
+                for _ in range(10):
+                    C = fn(A, B)
+                C.block_until_ready()
+                dt = (time.perf_counter() - t0) / 10
+            err = np.abs(np.asarray(C) - ref).max()
+            print(f"  {sched:>10}: {dt*1e6:8.1f} us  max_err={err:.2e}")
+
+    axis_mesh = jax.make_mesh((n_dev,), ("model",),
+                              axis_types=(jax.sharding.AxisType.Auto,))
+    attn = jax.random.normal(jax.random.PRNGKey(2), (64, 16 * n_dev), jnp.float32)
+    wo = jax.random.normal(jax.random.PRNGKey(3), (16 * n_dev, 32), jnp.float32)
+    print(f"\nFusedConcatLinear reduction over {n_dev} head-shards:")
+    for sched in ("native", "chain", "tree"):
+        with jax.set_mesh(axis_mesh):
+            y = fcl_sharded(attn, wo, axis_mesh, schedule=sched)
+        err = np.abs(np.asarray(y) - np.asarray(attn @ wo)).max()
+        print(f"  {sched:>10}: max_err={err:.2e}")
+
+    print("\noverlapped collective matmuls (beyond-paper):")
+    x = jax.random.normal(jax.random.PRNGKey(4), (16 * n_dev, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 8 * n_dev), jnp.float32)
+    with jax.set_mesh(axis_mesh):
+        y = ag_matmul_sharded(x, w, axis_mesh)
+    print(f"  ag_matmul   max_err={np.abs(np.asarray(y) - np.asarray(x @ w)).max():.2e}")
+    x2 = jax.random.normal(jax.random.PRNGKey(6), (16 * n_dev, 32 * n_dev), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(7), (32 * n_dev, 24), jnp.float32)
+    with jax.set_mesh(axis_mesh):
+        y2 = matmul_rs_sharded(x2, w2, axis_mesh)
+    print(f"  matmul_rs   max_err={np.abs(np.asarray(y2) - np.asarray(x2 @ w2)).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""qwen1.5-0.5b [dense] — 24L d_model=1024 16H (kv=16) d_ff=2816
+vocab=151936, QKV bias.  [hf:Qwen/Qwen1.5-0.5B]"""
+
+from repro.configs._util import reduce_for_smoke
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="transformer",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=2816,
+    vocab=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+)
+
+
+def smoke_config():
+    return reduce_for_smoke(CONFIG, n_kv_heads=4)

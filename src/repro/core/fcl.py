@@ -1,0 +1,61 @@
+"""FusedConcatLinear GEMM (Section 4.3.2, Fig. 8b).
+
+Multi-head attention output projection with one head(-group) per device:
+fusing the concat + linear layers turns the projection into a GEMM
+distributed along K (the concatenated head dim), leaving one *reduction*
+of the partial C across devices — the paper's wide in-network reduction
+use-case.
+
+  y = concat_h(attn_h) @ W_o  ==  sum_h (attn_h @ W_o[h])
+
+``schedule`` selects the reduction implementation.  'native' + DCA maps to
+``psum`` (or ``reduce_scatter`` when ``scatter=True``): the adds execute on
+each hop's VPU — in-network from the program's point of view, with the
+consumer's compute "borrowed" exactly as DCA borrows the tile FPUs.
+``scatter=True`` keeps the result sharded for a sharded consumer (the
+fused-epilogue form; see also kernels/gemm's accumulate epilogue).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules as sched
+
+
+def fcl(attn_local, wo_local, axis: str, schedule: str = "native",
+        scatter: bool = False, chunks: int = 4):
+    """Local FCL body; call inside shard_map.
+
+    attn_local: (tokens, hd_local) — this device's head-group activations;
+    wo_local:   (hd_local, d_out)  — matching rows of W_o.
+    Returns (tokens, d_out) replicated, or (tokens/n, d_out) if scatter.
+    """
+    partial_c = attn_local.astype(jnp.float32) @ wo_local.astype(jnp.float32)
+    partial_c = partial_c.astype(attn_local.dtype)
+    if scatter:
+        return sched.reduce_scatter(partial_c, axis, schedule=schedule)
+    return sched.all_reduce(partial_c, axis, schedule=schedule, chunks=chunks)
+
+
+def fcl_sharded(attn, wo, mesh, axis: str = "model", schedule: str = "native",
+                scatter: bool = False):
+    """shard_map wrapper.
+
+    attn: (tokens, H*hd) sharded on the head dim; wo: (H*hd, d) row-sharded.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    out_spec = P(axis, None) if scatter else P(None, None)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(None, axis), P(axis, None)),
+             out_specs=out_spec,
+             check_vma=False)
+    def run(a, w):
+        return fcl(a, w, axis, schedule=schedule, scatter=scatter)
+
+    return run(attn, wo)

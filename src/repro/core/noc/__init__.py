@@ -1,0 +1,10 @@
+"""Cycle-level substrate reproducing the paper's own evaluation.
+
+``params``    — hardware/runtime parameter sets (+ TPU-pod mapping)
+``model``     — the paper's analytical runtime models, Eqs (1)-(6), (10)-(15)
+``netsim``    — flit-level 2-D-mesh simulator (multicast fork / reduction join)
+``energy``    — Table-1 energy model and Fig-10 scaling
+``calibrate`` — validation of every numeric claim in the paper
+"""
+
+from repro.core.noc.params import NoCParams, PAPER_MICRO, PAPER_GEMM  # noqa: F401

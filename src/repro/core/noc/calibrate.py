@@ -1,0 +1,133 @@
+"""Validation of the paper's numeric claims against the reproduced models.
+
+Each entry declares the claim from the paper, the achieved value from our
+models/simulator and an acceptance tolerance.  ``benchmarks.run`` prints
+the table; ``tests/test_noc_claims.py`` asserts every row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.noc import energy as noc_energy
+from repro.core.noc import model as m
+from repro.core.noc.params import NoCParams, PAPER_GEMM, PAPER_MICRO
+
+KIB = 1024
+SIZES_1_32K = [1 * KIB, 2 * KIB, 4 * KIB, 8 * KIB, 16 * KIB, 32 * KIB]
+
+
+@dataclasses.dataclass(frozen=True)
+class Claim:
+    name: str
+    paper_value: float
+    achieved: float
+    rel_tol: float
+
+    @property
+    def ok(self) -> bool:
+        if self.paper_value == 0:
+            return abs(self.achieved) <= self.rel_tol
+        return abs(self.achieved - self.paper_value) <= self.rel_tol * abs(self.paper_value)
+
+
+def multicast_speedups(p: NoCParams = PAPER_MICRO, c: int = 4, r: int = 1) -> list[float]:
+    out = []
+    for size in SIZES_1_32K:
+        n = p.beats(size)
+        out.append(m.multicast_sw_best(p, n, c, r) / m.multicast_hw(p, n, c, r))
+    return out
+
+
+def reduction_speedups(p: NoCParams = PAPER_MICRO, c: int = 4, r: int = 1) -> list[float]:
+    out = []
+    for size in SIZES_1_32K:
+        n = p.beats(size)
+        out.append(m.reduction_sw_best(p, n, c, r) / m.reduction_hw(p, n, c, r))
+    return out
+
+
+def all_claims() -> list[Claim]:
+    p = PAPER_MICRO
+    g = PAPER_GEMM
+
+    # Measurement set mirrors the paper's figures: the 1-D size sweep
+    # (Figs 5a/7a) plus the 2-D row sweeps at 32 KiB (Figs 5c/7b).
+    def two_d(points_fn):
+        n32 = p.beats(32 * KIB)
+        return [points_fn(p, n32, 4, r) for r in (2, 4)]
+
+    mc_1d = multicast_speedups(p)
+    mc_all = mc_1d + two_d(
+        lambda p, n, c, r: m.multicast_sw_best(p, n, c, r) / m.multicast_hw(p, n, c, r)
+    )
+    rd_1d = reduction_speedups(p)
+    rd_all = rd_1d + two_d(
+        lambda p, n, c, r: m.reduction_sw_best(p, n, c, r) / m.reduction_hw(p, n, c, r)
+    )
+
+    summa = m.summa_sweep(g)
+    summa_speedups = [pt.speedup for pt in summa]
+    fcl = dict(m.fcl_sweep(g))
+
+    n32 = p.beats(32 * KIB)
+    red_1d_32k = m.reduction_hw(p, n32, 4, 1)
+    red_2d_32k = m.reduction_hw(p, n32, 4, 4)
+
+    claims = [
+        Claim("multicast geomean speedup (abstract: 2.9x, 1-32 KiB)", 2.9,
+              m.geomean(mc_all), 0.15),
+        Claim("multicast 1D min speedup (4.2.2: 2.3x)", 2.3, min(mc_1d), 0.15),
+        Claim("multicast 1D max speedup (4.2.2: 3.2x)", 3.2, max(mc_1d), 0.15),
+        Claim("reduction geomean speedup (abstract: 2.5x, 1-32 KiB)", 2.5,
+              m.geomean(rd_all), 0.15),
+        Claim("reduction 1D min speedup (4.2.3: 2.0x)", 2.0, min(rd_1d), 0.2),
+        Claim("reduction 1D max speedup (4.2.3: 3.0x)", 3.0, max(rd_1d), 0.2),
+        Claim("2D reduction 32KiB slowdown vs 1D (4.2.3: 1.9x)", 1.9,
+              red_2d_32k / red_1d_32k, 0.15),
+        Claim("SUMMA max speedup (4.3.1: 3.8x at 256x256)", 3.8,
+              max(summa_speedups), 0.15),
+        Claim("SUMMA min speedup (4.3.1: 1.1x)", 1.1, min(summa_speedups), 0.15),
+        Claim("SUMMA SW memory-bound at 16x16 (bool)", 1.0,
+              1.0 if m.summa_point(g, 16).sw_bound == "comm" else 0.0, 0.0),
+        Claim("SUMMA HW compute-bound at 256x256 (bool)", 1.0,
+              1.0 if m.summa_point(g, 256).hw_bound == "comp" else 0.0, 0.0),
+        Claim("FCL max speedup (4.3.2: 2.4x)", 2.4, max(fcl.values()), 0.2),
+        Claim("SUMMA energy saving at 256x256 (4.3.3: 1.17x)", 1.17,
+              noc_energy.summa_saving(256), 0.05),
+        Claim("FCL energy saving at 256x256 (4.3.3: 1.13x)", 1.13,
+              noc_energy.fcl_saving(256), 0.05),
+        Claim("SW barrier slope (4.2.1: 3.3 cyc/cluster)", 3.3,
+              p.barrier_slope_sw, 0.01),
+        Claim("HW barrier slope (4.2.1: 1.3 cyc/cluster)", 1.3,
+              p.barrier_slope_hw, 0.01),
+    ]
+    # Table 1 count anchors at 16x16 (kB / kOP)
+    t1 = noc_energy.table1(16)
+    anchors = [
+        ("SUMMA SW", "dma_store_kB", 983.0, 0.05),
+        ("SUMMA SW", "hop_kB", 1114.0, 0.05),
+        ("SUMMA SW", "gemm_kOP", 1049.0, 0.05),
+        ("SUMMA HW", "dma_store_kB", 66.0, 0.05),
+        ("SUMMA HW", "hop_kB", 983.0, 0.05),
+        ("FCL SW", "dma_load_kB", 524.0, 0.05),
+        ("FCL SW", "hop_kB", 4524.0, 0.08),
+        ("FCL SW", "sw_reduce_kOP", 65.0, 0.05),
+        ("FCL HW", "dca_reduce_kOP", 65.0, 0.05),
+        ("FCL HW", "spm_write_kB", 35.0, 0.1),
+        ("FCL HW", "hop_kB", 3932.0, 0.08),
+    ]
+    for row, col, val, tol in anchors:
+        claims.append(Claim(f"Table1 {row} {col} ({val})", val, t1[row][col], tol))
+    return claims
+
+
+def report() -> str:
+    lines = [f"{'claim':64s} {'paper':>9s} {'ours':>9s}  ok"]
+    for c in all_claims():
+        lines.append(f"{c.name:64s} {c.paper_value:9.3f} {c.achieved:9.3f}  {'PASS' if c.ok else 'FAIL'}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

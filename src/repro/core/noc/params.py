@@ -1,0 +1,71 @@
+"""Parameter sets for the NoC runtime/energy models.
+
+Two calibrated presets are provided, mirroring the two operating regimes the
+paper evaluates:
+
+* ``PAPER_MICRO`` — the collective micro-benchmarks of Section 4.2 (cold
+  DMA round-trips from L2 on an otherwise idle network; full barrier
+  round-trips between stages).
+* ``PAPER_GEMM`` — the steady-state double-buffered GEMM regime of
+  Section 4.3 (descriptors pre-programmed, synchronization amortized by the
+  hardware barrier), where per-stage overheads are smaller.
+
+The parameter values are calibrated once (see ``calibrate.py``) so that the
+models reproduce the paper's claimed speedup ranges; every claim and the
+achieved value is reported by ``benchmarks`` and asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NoCParams:
+    """Cycle-level parameters of the wide/narrow NoC and the clusters."""
+
+    # -- wide network ------------------------------------------------------
+    beat_bytes: int = 64          # 512-bit wide network
+    beta: float = 1.0             # inverse bandwidth [cycles / beat]
+    hop_cycles: float = 1.0       # per-router/link latency [cycles / hop]
+    alpha0: float = 50.0          # DMA setup + protocol round-trip base [cycles]
+
+    # -- synchronization ---------------------------------------------------
+    delta: float = 10.0           # inter-stage barrier cost in SW schedules [cycles]
+    barrier_base_sw: float = 40.0  # SW barrier intercept [cycles]
+    barrier_slope_sw: float = 3.3  # SW barrier slope [cycles / cluster] (paper Fig 2b)
+    barrier_base_hw: float = 30.0  # HW barrier intercept [cycles]
+    barrier_slope_hw: float = 1.3  # HW barrier slope [cycles / cluster] (paper Fig 2b)
+
+    # -- cluster compute ---------------------------------------------------
+    alpha_c: float = 10.0         # SW-reduction loop setup overhead [cycles]
+    beta_c: float = 1.0           # SW/DCA reduction inverse throughput [cycles/beat]
+    #    (8 x 64-bit SIMD FPUs = 64 B/cycle = 1 beat/cycle, Section 3.2.1)
+    macs_per_cycle: float = 8.0   # 8 FPUs x 1 FMA [MAC / cycle / cluster]
+    gemm_utilization: float = 0.981  # Section 4.3.1 (Colagrande et al., 2025)
+
+    # -- schedule policy ---------------------------------------------------
+    # Software SUMMA serializes the A-row and B-column collectives on the
+    # cluster DMA engine; the HW path streams them from independent memory
+    # tiles in parallel.  (Section 4.3.1 discussion; see DESIGN.md.)
+    sw_gemm_serializes_ab: bool = True
+
+    def alpha(self, hops: float) -> float:
+        """Round-trip latency of a DMA transfer spanning ``hops`` hops."""
+        return self.alpha0 + 2.0 * self.hop_cycles * hops
+
+    def beats(self, nbytes: int) -> int:
+        return max(1, -(-int(nbytes) // self.beat_bytes))
+
+    def barrier_sw(self, clusters: int) -> float:
+        return self.barrier_base_sw + self.barrier_slope_sw * clusters
+
+    def barrier_hw(self, clusters: int) -> float:
+        return self.barrier_base_hw + self.barrier_slope_hw * clusters
+
+
+# Calibrated against Section 4.2 claims (see tests/test_noc_claims.py).
+PAPER_MICRO = NoCParams()
+
+# Calibrated against Section 4.3 claims: steady-state double-buffered GEMM.
+PAPER_GEMM = NoCParams(alpha0=20.0, delta=8.0, alpha_c=10.0)

@@ -1,0 +1,234 @@
+"""Collective schedules: the paper's SW baselines and HW path, on mesh axes.
+
+Each schedule is an SPMD program over one named mesh axis (usable inside
+``jax.shard_map``), mirroring the paper's taxonomy one-to-one:
+
+  paper (Section 4.2)                    here
+  -------------------------------------  -------------------------------------
+  naive sequential multicast   (Eq 1)    ``broadcast(..., schedule="chain")``
+  pipelined sequential         (Eq 2)    ``broadcast(..., schedule="pipelined", chunks=k)``
+  binary-tree multicast        (Eq 3)    ``broadcast(..., schedule="tree")``
+  in-network (HW) multicast    (Eq 4)    ``broadcast(..., schedule="native")``
+  sequential reduction         (Eq 5)    ``all_reduce(..., schedule="chain")``
+  tree reduction               (Eq 6)    ``all_reduce(..., schedule="tree")``
+  in-network (HW) reduction + DCA        ``all_reduce(..., "native")`` /
+                                         ``reduce_scatter`` fused into the consumer
+  LsbAnd barrier               (4.2.1)   ``barrier(axis)``
+
+The native schedules lower to single XLA collectives (executed by the ICI
+fabric — the TPU analogue of the paper's in-network support); the software
+schedules lower to ``collective-permute`` chains whose total traffic is
+visible in the compiled HLO, which is how the HW-vs-SW comparison is made
+on the production mesh (see launch/roofline).
+
+All schedules assume a power-of-two axis size, matching the paper's
+(dst, mask) submesh constraint (Section 3.2.2) — enforced here.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+SCHEDULES = ("native", "chain", "pipelined", "tree")
+
+
+def _axis_size(axis: str) -> int:
+    return jax.lax.axis_size(axis)
+
+
+def _check_pow2(n: int, what: str):
+    if n & (n - 1):
+        raise ValueError(
+            f"{what}: axis size {n} is not a power of two — collective groups "
+            "must satisfy the (dst, mask) submesh-encoding constraint")
+
+
+def _ring_perm(n: int, shift: int = 1):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def _xor_perm(n: int, mask: int):
+    return [(i, i ^ mask) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Broadcast (paper: multicast)
+# ---------------------------------------------------------------------------
+
+
+def broadcast(x, axis: str, root: int = 0, schedule: str = "native", chunks: int = 1):
+    """Broadcast ``x`` from ``root`` along ``axis`` to all members."""
+    n = _axis_size(axis)
+    _check_pow2(n, "broadcast")
+    idx = jax.lax.axis_index(axis)
+    if schedule == "native":
+        # In-network multicast: one fabric-level collective.
+        masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+        return jax.lax.psum(masked, axis)
+    if schedule == "chain":
+        return _broadcast_chain(x, axis, root, n, idx, chunks=1)
+    if schedule == "pipelined":
+        return _broadcast_chain(x, axis, root, n, idx, chunks=chunks)
+    if schedule == "tree":
+        return _broadcast_tree(x, axis, root, n, idx)
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def _broadcast_chain(x, axis, root, n, idx, chunks: int):
+    """Neighbour chain from the root (Eq 1); ``chunks>1`` pipelines it (Eq 2).
+
+    Executes n-1 ppermute steps per chunk; chunk c's step s moves the chunk
+    from relative position s to s+1.  SPMD-uniform: every device runs every
+    step; non-participants forward zeros that are masked out.
+    """
+    rel = (idx - root) % n  # my distance down the chain
+    parts = jnp.split(x, chunks, axis=0) if chunks > 1 else [x]
+    out_parts = []
+    perm = _ring_perm(n)
+    for part in parts:
+        have = jnp.where(rel == 0, part, jnp.zeros_like(part))
+        acc = have
+        for _ in range(n - 1):
+            have = jax.lax.ppermute(have, axis, perm)
+            acc = acc + have  # each device receives its copy exactly once
+        out_parts.append(acc)
+    return jnp.concatenate(out_parts, axis=0) if chunks > 1 else out_parts[0]
+
+
+def _broadcast_tree(x, axis, root, n, idx):
+    """Recursive-doubling broadcast (Eq 3): log2(n) ppermute stages."""
+    rel = (idx - root) % n
+    have = jnp.where(rel == 0, x, jnp.zeros_like(x))
+    stages = n.bit_length() - 1
+    for i in range(stages):
+        dist = 1 << i
+        perm = [(j, (j + dist) % n) for j in range(n)]
+        recv = jax.lax.ppermute(have, axis, perm)
+        # devices with rel >= dist receive from rel - dist
+        have = jnp.where((rel >= dist) & (rel < 2 * dist), recv, have)
+    return have
+
+
+# ---------------------------------------------------------------------------
+# All-reduce (paper: reduction; result delivered to all = reduction+multicast,
+# the AXI coupling of Section 3.1)
+# ---------------------------------------------------------------------------
+
+
+def all_reduce(x, axis: str, schedule: str = "native", chunks: int = 1):
+    n = _axis_size(axis)
+    _check_pow2(n, "all_reduce")
+    if schedule == "native":
+        return jax.lax.psum(x, axis)
+    if schedule == "tree":
+        # recursive doubling: log2(n) full-size exchanges
+        out = x
+        for i in range(n.bit_length() - 1):
+            recv = jax.lax.ppermute(out, axis, _xor_perm(n, 1 << i))
+            out = out + recv
+        return out
+    if schedule in ("chain", "pipelined"):
+        # ring reduce-scatter + ring all-gather; "chain" moves whole tensors,
+        # "pipelined" moves 1/n chunks (the k=n limit of Eq 2 in software).
+        if schedule == "chain":
+            acc = x
+            for _ in range(n - 1):
+                acc = jax.lax.ppermute(acc, axis, _ring_perm(n)) + x
+            return acc
+        return _ring_all_reduce(x, axis, n)
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def _ring_all_reduce(x, axis, n):
+    """Bandwidth-optimal ring: RS then AG on 1/n chunks."""
+    idx = jax.lax.axis_index(axis)
+    pad = (-x.shape[0]) % n
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+    parts = jnp.stack(jnp.split(xp, n, axis=0))  # (n, m/n, ...)
+    # ring reduce-scatter: device i starts with its copy of chunk (i-1); at
+    # step s it receives the partial sum of chunk (i-2-s) and adds its own
+    # copy; after n-1 hops device i holds the fully-reduced chunk i.
+    carry = jnp.take(parts, (idx - 1) % n, axis=0)
+    for step in range(n - 1):
+        carry = jax.lax.ppermute(carry, axis, _ring_perm(n))
+        carry = carry + jnp.take(parts, (idx - 2 - step) % n, axis=0)
+    # all-gather the reduced chunks around the ring
+    gathered = [carry]
+    g = carry
+    for _ in range(n - 1):
+        g = jax.lax.ppermute(g, axis, _ring_perm(n))
+        gathered.append(g)
+    # device i received chunks in order [i, i-1, i-2, ...]; reassemble to 0..n-1
+    stackd = jnp.stack(gathered)  # position p holds chunk (i - p) mod n
+    order = jnp.mod(idx - jnp.arange(n), n)
+    out = jnp.zeros_like(stackd)
+    out = out.at[order].set(stackd)
+    out = out.reshape((-1,) + x.shape[1:])
+    return out[: x.shape[0]] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# All-gather / reduce-scatter
+# ---------------------------------------------------------------------------
+
+
+def all_gather(x, axis: str, schedule: str = "native"):
+    """Gather shards along a new leading dim -> concatenated on dim 0."""
+    n = _axis_size(axis)
+    _check_pow2(n, "all_gather")
+    if schedule == "native":
+        return jax.lax.all_gather(x, axis, tiled=True)
+    idx = jax.lax.axis_index(axis)
+    if schedule in ("chain", "pipelined"):
+        gathered = [x]
+        g = x
+        for _ in range(n - 1):
+            g = jax.lax.ppermute(g, axis, _ring_perm(n))
+            gathered.append(g)
+        stackd = jnp.stack(gathered)  # position p holds shard (i - p) mod n
+        order = jnp.mod(idx - jnp.arange(n), n)
+        out = jnp.zeros_like(stackd)
+        out = out.at[order].set(stackd)
+        return out.reshape((n * x.shape[0],) + x.shape[1:])
+    if schedule == "tree":
+        # recursive doubling all-gather
+        block = x[None]  # (1, ...)
+        for i in range(n.bit_length() - 1):
+            dist = 1 << i
+            recv = jax.lax.ppermute(block, axis, _xor_perm(n, dist))
+            low = (idx & dist) == 0
+            cat_lo = jnp.concatenate([block, recv], axis=0)
+            cat_hi = jnp.concatenate([recv, block], axis=0)
+            block = jnp.where(low, cat_lo, cat_hi)
+        return block.reshape((n * x.shape[0],) + x.shape[1:])
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def reduce_scatter(x, axis: str, schedule: str = "native"):
+    """Sum over the axis, scattering dim 0: (m, ...) -> (m/n, ...).
+
+    The DCA analogue: the reduction lands directly in the consumer's shard,
+    with the adds executed by the receiving core's VPU along the path.
+    """
+    n = _axis_size(axis)
+    _check_pow2(n, "reduce_scatter")
+    if schedule == "native":
+        return jax.lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+    idx = jax.lax.axis_index(axis)
+    parts = jnp.stack(jnp.split(x, n, axis=0))
+    carry = jnp.take(parts, (idx - 1) % n, axis=0)
+    for step in range(n - 1):
+        carry = jax.lax.ppermute(carry, axis, _ring_perm(n))
+        carry = carry + jnp.take(parts, (idx - 2 - step) % n, axis=0)
+    return carry
+
+
+def barrier(axis: str, schedule: str = "native"):
+    """LsbAnd-analogue barrier: a 1-element reduction over the axis."""
+    token = jnp.ones((), jnp.int32)
+    if schedule == "native":
+        return jax.lax.psum(token, axis)
+    return all_reduce(token[None], axis, schedule="tree")[0]

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMSource, ByteFileSource, make_source  # noqa: F401

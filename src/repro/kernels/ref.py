@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, c=None, accumulate: bool = False):
+    out = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    if accumulate and c is not None:
+        out = out + c.astype(jnp.float32)
+    return out.astype(a.dtype)
+
+
+def reduce_nway_ref(x, op: str = "add"):
+    if op == "add":
+        return jnp.sum(x.astype(jnp.float32), axis=0).astype(x.dtype)
+    if op == "max":
+        return jnp.max(x, axis=0)
+    if op == "and":
+        out = x[0]
+        for i in range(1, x.shape[0]):
+            out = out & x[i]
+        return out
+    raise ValueError(op)
+
+
+def flash_attention_ref(q, k, v, window: int = 0):
+    BH, S, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """Sequential oracle for h_t = a_t h_{t-1} + b_t."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    _, h = jax.lax.scan(step, jnp.zeros_like(a32[:, 0]),
+                        (a32.swapaxes(0, 1), b32.swapaxes(0, 1)))
+    return h.swapaxes(0, 1).astype(a.dtype)
+
+
+def wkv_ref(r, k, v, logw, u):
+    """Sequential oracle for the RWKV-6 recurrence."""
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs  # (BH, hd)
+        kv = jnp.einsum("bi,bj->bij", kt, vt)
+        out = jnp.einsum("bi,bij->bj", rt, S + u[:, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    BH, S_len, hd = r.shape
+    f32 = lambda x: x.astype(jnp.float32)
+    xs = tuple(x.swapaxes(0, 1) for x in (f32(r), f32(k), f32(v), f32(logw)))
+    _, outs = jax.lax.scan(step, jnp.zeros((BH, hd, hd), jnp.float32), xs)
+    return outs.swapaxes(0, 1).astype(r.dtype)

@@ -1,0 +1,73 @@
+"""Chunked RWKV-6 WKV kernel (data-dependent-decay linear attention).
+
+One (batch*head) slice per grid row; the chunk dimension iterates
+sequentially carrying the (hd x hd) state in VMEM scratch.  Within a chunk
+everything is MXU matmuls: the intra-chunk term is a masked (c x c)
+attention-like product, the inter-chunk term a (c, hd) x (hd, hd) matmul —
+the same formulation as models/rwkv6.chunked_wkv, specialized per head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)    # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)  # log-decay, <= 0
+    u = u_ref[0].astype(jnp.float32)    # (1, hd) bonus
+
+    cum = jnp.cumsum(lw, axis=0)
+    p_excl = cum - lw
+    A = cum[-1]
+
+    state = s_ref[...]
+    r_dec = r * jnp.exp(p_excl)
+    out_inter = r_dec @ state                          # (c, hd)
+    att = (r * jnp.exp(p_excl)) @ (k * jnp.exp(-cum)).T
+    c = r.shape[0]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    att = jnp.where(mask, att, 0.0)
+    out_intra = att @ v
+    diag = jnp.sum(r * (u * k), axis=-1, keepdims=True)
+    out = out_inter + out_intra + diag * v
+    k_dec = k * jnp.exp(A[None, :] - cum)
+    s_ref[...] = jnp.exp(A)[:, None] * state + k_dec.T @ v
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = True):
+    """r,k,v,logw: (BH, S, hd); u: (BH, hd). Returns out (BH, S, hd)."""
+    BH, S, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=(BH, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,80 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_0_5b \
+      --steps 200 --batch 8 --seq 256 --scale 100m --ckpt-dir /tmp/ck
+
+``--scale`` picks a same-family reduction of the assigned config sized for
+this host (smoke ~1M params, 100m ~100M params); the full assigned configs
+are exercised via launch/dryrun.py on the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data import ByteFileSource, SyntheticLMSource
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def scaled_config(arch: str, scale: str):
+    if scale == "full":
+        return get_config(arch)
+    if scale == "smoke":
+        return get_smoke_config(arch)
+    if scale == "100m":
+        cfg = get_smoke_config(arch)
+        import jax.numpy as jnp
+
+        return dataclasses.replace(
+            cfg, n_layers=8, d_model=512, n_heads=8,
+            n_kv_heads=min(8, max(1, cfg.n_kv_heads)), head_dim=64,
+            d_ff=2048, vocab=32768, loss_chunk=256,
+            param_dtype=jnp.float32, compute_dtype=jnp.float32, remat=False)
+    raise ValueError(scale)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b", choices=ARCH_IDS)
+    ap.add_argument("--scale", default="100m", choices=["smoke", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default=None, help="path for byte-level data")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = scaled_config(args.arch, args.scale)
+    if args.data:
+        src = ByteFileSource(args.data, seq_len=args.seq, global_batch=args.batch,
+                             seed=args.seed)
+        cfg = dataclasses.replace(cfg, vocab=256)
+    else:
+        src = SyntheticLMSource(vocab=cfg.vocab, seq_len=args.seq,
+                                global_batch=args.batch, seed=args.seed,
+                                branching=4)
+    n_params = cfg.n_params
+    print(f"arch={cfg.name} family={cfg.family} params~{n_params/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+    tcfg = TrainerConfig(
+        adamw=AdamWConfig(lr=args.lr), warmup=min(50, args.steps // 10 + 1),
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tcfg)
+    trainer.fit(src, steps=args.steps, rng=jax.random.PRNGKey(args.seed))
+    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+    k = max(1, min(10, len(losses) // 5))
+    print(f"loss: first{k}={sum(losses[:k])/k:.4f} "
+          f"last{k}={sum(losses[-k:])/k:.4f} steps={len(losses)}")
+
+
+if __name__ == "__main__":
+    main()

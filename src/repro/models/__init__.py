@@ -1,0 +1,18 @@
+"""Model zoo substrate: pure-JAX functional models with scan-over-layers.
+
+Families:
+  * ``transformer``   — dense / GQA / MoE / local-global decoder LMs
+                        (yi, qwen, glm4, gemma3, phi3.5-moe, moonshot,
+                        chameleon)
+  * ``rglru_hybrid``  — RecurrentGemma/Griffin-style RG-LRU + local-attn
+  * ``rwkv6``         — attention-free RWKV-6 ("Finch")
+  * ``whisper``       — encoder-decoder audio backbone (conv frontend stub)
+
+All models expose the same functional API (see ``models.api``):
+  init(rng, cfg) -> params            param_specs(cfg, policy) -> pytree(P)
+  loss_fn(params, batch, cfg) -> scalar
+  prefill(params, tokens, cfg) -> (logits, cache)
+  decode_step(params, cache, tokens, pos, cfg) -> (logits, cache)
+"""
+
+from repro.models.api import get_family  # noqa: F401

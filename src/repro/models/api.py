@@ -1,0 +1,22 @@
+"""Uniform functional API over the model families."""
+
+from __future__ import annotations
+
+import types
+
+from repro.models import rglru, rwkv6, transformer, whisper
+from repro.models.common import ModelConfig
+
+_FAMILIES = {
+    "transformer": transformer,
+    "rglru_hybrid": rglru,
+    "rwkv6": rwkv6,
+    "whisper": whisper,
+}
+
+
+def get_family(cfg_or_name) -> types.ModuleType:
+    name = cfg_or_name.family if isinstance(cfg_or_name, ModelConfig) else cfg_or_name
+    if name not in _FAMILIES:
+        raise KeyError(f"unknown model family {name!r}; have {sorted(_FAMILIES)}")
+    return _FAMILIES[name]

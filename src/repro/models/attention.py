@@ -1,0 +1,257 @@
+"""Grouped-query attention with causal / sliding-window masks and KV caches.
+
+One code path covers all assigned attention archs:
+  * full causal attention             (yi, qwen, glm4, phi, moonshot, chameleon)
+  * sliding-window ("local")          (gemma3 local layers, recurrentgemma)
+  * per-layer window selection        (gemma3 5:1 local:global — the window is
+                                       a traced per-layer scalar, so the 6-layer
+                                       pattern still scans as one homogeneous body)
+  * bidirectional                     (whisper encoder)
+  * cross-attention                   (whisper decoder)
+
+Decode uses a pre-allocated ring-free cache updated with dynamic_update_slice;
+for the 500k-long-context cells the cache is sequence-sharded over the DP axis
+and gathered per global layer (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShardingPolicy, REPLICATED, constrain, dense_init
+from repro.models.rope import apply_rope
+
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, n_kv, head_dim)
+    v: jax.Array  # (B, S_max, n_kv, head_dim)
+
+
+def init_attn_params(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.param_dtype)
+    return p
+
+
+def attn_param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    hd = cfg.head_dim
+    p = {
+        "wq": policy.w_col(cfg.n_heads * hd) if cfg.n_heads * hd else policy.none(),
+        "wk": policy.w_col(cfg.n_kv_heads * hd),
+        "wv": policy.w_col(cfg.n_kv_heads * hd),
+        "wo": policy.w_row(cfg.n_heads * hd),
+    }
+    if cfg.qkv_bias:
+        from jax.sharding import PartitionSpec as P
+
+        p["bq"] = P(policy._model_if_divisible(cfg.n_heads * hd))
+        p["bk"] = P(policy._model_if_divisible(cfg.n_kv_heads * hd))
+        p["bv"] = P(policy._model_if_divisible(cfg.n_kv_heads * hd))
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"].astype(cfg.compute_dtype)
+    k = x @ params["wk"].astype(cfg.compute_dtype)
+    v = x @ params["wv"].astype(cfg.compute_dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cfg.compute_dtype)
+        k = k + params["bk"].astype(cfg.compute_dtype)
+        v = v + params["bv"].astype(cfg.compute_dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa_block(q5, k, v, mask, cfg: ModelConfig):
+    """One q-block of grouped-query attention.
+
+    q5: (B,Sq,Hkv,G,hd); k,v: (B,Sk,Hkv,hd); mask: (B|1, 1, Sq, Sk) bool.
+    Grouped einsums instead of ``jnp.repeat`` of K/V: no materialized
+    H-headed KV copy (saves memory AND keeps GSPMD on the cache's sharding
+    — the repeat tensor otherwise invites a head-dim resharding that
+    round-trips the cache through a replicated layout).
+    """
+    B, Sq, Hkv, G, hd = q5.shape
+    m5 = mask[:, None]  # (B|1, 1, 1, Sq, Sk) broadcasting over (kv, G)
+    if cfg.attn_bf16_logits:
+        # bf16 logits halve the (S x S) HBM traffic; max-shifted softmax in
+        # bf16 stays stable for attention-scale magnitudes (§Perf lever).
+        scale = jnp.asarray(1.0 / (hd ** 0.5), jnp.bfloat16)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q5.astype(jnp.bfloat16),
+                            k.astype(jnp.bfloat16)) * scale
+        logits = jnp.where(m5, logits, jnp.asarray(-3e38, jnp.bfloat16))
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q5.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = jnp.where(m5, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(cfg.compute_dtype), v)
+    return out.reshape(B, Sq, Hkv * G * hd)
+
+
+def _sdpa_flat(q, k, v, mask, cfg: ModelConfig):
+    """Repeat-KV attention with flat heads (training/prefill path).
+
+    Keeps the head dim intact so TP head sharding (H % tp == 0) survives;
+    the grouped path would reshape H -> (Hkv, G), which a single mesh axis
+    cannot shard when Hkv < tp (measured: resharding storms in train cells).
+    """
+    B, Sq, H, hd = q.shape
+    group = H // k.shape[2]
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    if cfg.attn_bf16_logits:
+        scale = jnp.asarray(1.0 / (hd ** 0.5), jnp.bfloat16)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.bfloat16),
+                            k.astype(jnp.bfloat16)) * scale
+        logits = jnp.where(mask, logits, jnp.asarray(-3e38, jnp.bfloat16))
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(cfg.compute_dtype), v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd); mask: (B|1, 1, Sq, Sk) bool.
+
+    Decode (Sq == 1) uses the grouped-einsum path: no repeated-KV
+    materialization, and the computation stays on the KV cache's layout
+    (with align_decode_cache this removes the per-layer cache round-trip —
+    the 250x collective win in §Perf).  Longer queries use the flat-head
+    path so TP head sharding survives; ``cfg.attn_q_chunk > 0`` processes
+    the query dim blockwise (flash-style memory at the XLA level; the real
+    kernel is kernels/flash_attention).
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    if Sq == 1:
+        return _sdpa_block(q.reshape(B, Sq, Hkv, H // Hkv, hd), k, v, mask, cfg)
+    chunk = cfg.attn_q_chunk
+    if chunk <= 0 or Sq <= chunk or Sq % chunk:
+        return _sdpa_flat(q, k, v, mask, cfg)
+    outs = []
+    for i in range(Sq // chunk):
+        mblk = mask[:, :, i * chunk:(i + 1) * chunk] if mask.shape[2] == Sq else mask
+        outs.append(_sdpa_flat(q[:, i * chunk:(i + 1) * chunk], k, v, mblk, cfg))
+    return jnp.concatenate(outs, axis=1)
+
+
+def causal_window_mask(Sq: int, Sk: int, window, offset: int = 0):
+    """(1,1,Sq,Sk) bool; window may be a traced scalar (0 => unlimited)."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    ki = jnp.arange(Sk)[None, :]
+    m = ki <= qi
+    w = jnp.asarray(window)
+    m = m & jnp.where(w > 0, ki > qi - w, True)
+    return m[None, None]
+
+
+def attention(params, x, positions, cfg: ModelConfig, *, window=0,
+              policy: ShardingPolicy = REPLICATED, bidirectional: bool = False):
+    """Self-attention over a full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    if not bidirectional:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, policy.act_bshd(cfg.n_heads))
+    k = constrain(k, policy.act_bshd(cfg.n_kv_heads))
+    if bidirectional:
+        mask = jnp.ones((1, 1, S, S), bool)
+    else:
+        mask = causal_window_mask(S, S, window)
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out @ params["wo"].astype(cfg.compute_dtype)
+    return constrain(out, policy.act_bsd())
+
+
+def cross_attention(params, x, memory, cfg: ModelConfig,
+                    policy: ShardingPolicy = REPLICATED):
+    """Decoder cross-attention onto encoder memory (whisper)."""
+    B, Sq, _ = x.shape
+    Sk = memory.shape[1]
+    hd = cfg.head_dim
+    q = (x @ params["wq"].astype(cfg.compute_dtype)).reshape(B, Sq, cfg.n_heads, hd)
+    k = (memory @ params["wk"].astype(cfg.compute_dtype)).reshape(B, Sk, cfg.n_kv_heads, hd)
+    v = (memory @ params["wv"].astype(cfg.compute_dtype)).reshape(B, Sk, cfg.n_kv_heads, hd)
+    mask = jnp.ones((1, 1, Sq, Sk), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return out @ params["wo"].astype(cfg.compute_dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+               dtype=None) -> KVCache:
+    hd = cfg.head_dim
+    dtype = dtype or cfg.compute_dtype
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_decode(params, x, layer_cache: KVCache, pos, cfg: ModelConfig, *,
+                     window=0, policy: ShardingPolicy = REPLICATED):
+    """One-token decode with cache update.
+
+    x: (B, 1, d); layer_cache k/v: (B, S_max, n_kv, hd); pos: scalar int.
+    Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    S_max = layer_cache.k.shape[1]
+    q, k_new, v_new = _qkv(params, x, cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    if policy.align_decode_cache:
+        from jax.sharding import PartitionSpec as P
+
+        kv_s, hd_s = policy.kv_dims(cfg.n_kv_heads, cfg.head_dim)
+        bspec = policy.batch_axes or None
+        kv_spec = P(bspec, None, kv_s, hd_s)
+        # q follows the cache layout: head-sharded iff kv heads shard (GQA
+        # groups stay aligned), else head_dim-sharded like the cache.
+        q_spec = P(bspec, None, policy._model_if_divisible(cfg.n_heads) if kv_s else None,
+                   hd_s)
+        k_new = constrain(k_new, kv_spec)
+        v_new = constrain(v_new, kv_spec)
+        q = constrain(q, q_spec)
+    k = jax.lax.dynamic_update_slice(layer_cache.k, k_new.astype(layer_cache.k.dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(layer_cache.v, v_new.astype(layer_cache.v.dtype),
+                                     (0, pos, 0, 0))
+    if policy.align_decode_cache:
+        k = constrain(k, kv_spec)
+        v = constrain(v, kv_spec)
+    ki = jnp.arange(S_max)[None, :]
+    valid = ki <= pos
+    w = jnp.asarray(window)
+    valid = valid & jnp.where(w > 0, ki > pos - w, True)
+    mask = valid[:, None, None, :]  # (1,1,1,S_max)
+    out = _sdpa(q, k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype), mask, cfg)
+    out = out @ params["wo"].astype(cfg.compute_dtype)
+    return constrain(out, policy.act_bsd()), KVCache(k=k, v=v)

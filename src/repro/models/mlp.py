@@ -1,0 +1,211 @@
+"""Gated MLPs and capacity-based top-k Mixture-of-Experts.
+
+The MoE dispatch is the scatter/sort formulation (tokens are flattened,
+ranked within their assigned expert via a cumulative one-hot, and scattered
+into a capacity-padded (E, C, d) buffer).  Experts are sharded over the
+``model`` mesh axis, so under pjit the dispatch lowers to the
+all-to-all-style collectives the paper's multicast/reduction fabric would
+carry (expert-parallel token exchange = many-to-many of multicast +
+reduction pairs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, REPLICATED, ShardingPolicy, constrain, dense_init
+
+
+def init_mlp_params(key, cfg: ModelConfig, d_model: int | None = None,
+                    d_ff: int | None = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), cfg.param_dtype),
+        "w_up": dense_init(ks[1], (d, f), cfg.param_dtype),
+        "w_down": dense_init(ks[2], (f, d), cfg.param_dtype),
+    }
+
+
+def mlp_param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    return {
+        "w_gate": policy.w_col(cfg.d_ff),
+        "w_up": policy.w_col(cfg.d_ff),
+        "w_down": policy.w_row(cfg.d_ff),
+    }
+
+
+def mlp(params, x, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    h = jax.nn.silu(x @ params["w_gate"].astype(cfg.compute_dtype))
+    h = h * (x @ params["w_up"].astype(cfg.compute_dtype))
+    h = constrain(h, policy.act_bsf(cfg.d_ff))
+    out = h @ params["w_down"].astype(cfg.compute_dtype)
+    return constrain(out, policy.act_bsd())
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe_params(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), cfg.param_dtype),
+        "w_up": dense_init(ks[2], (e, d, f), cfg.param_dtype),
+        "w_down": dense_init(ks[3], (e, f, d), cfg.param_dtype),
+    }
+
+
+def moe_param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    from jax.sharding import PartitionSpec as P
+
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": P(None, None),
+        "w_gate": policy.w_expert_col(e, f),
+        "w_up": policy.w_expert_col(e, f),
+        "w_down": policy.w_expert_row(e, f),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    per_expert = (n_tokens * cfg.top_k + cfg.n_experts - 1) // cfg.n_experts
+    cap = int(per_expert * cfg.capacity_factor) + 1
+    return min(cap, n_tokens)
+
+
+def _route(params, xf, cfg: ModelConfig):
+    """Router: returns (gate_vals (T,K), gate_idx (T,K), aux scalar)."""
+    E, K = cfg.n_experts, cfg.top_k
+    T = xf.shape[0]
+    logits = xf.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # auxiliary load-balancing loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,)).at[gate_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+    return gate_vals, gate_idx, aux
+
+
+def _dispatch_indices(gate_idx, E: int, C: int):
+    """Capacity-ranked scatter indices. Returns (tok_idx, e_idx, c_idx, keep)."""
+    T, K = gate_idx.shape
+    flat_expert = gate_idx.reshape(-1)                          # (T*K,)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot         # rank within expert
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = pos < C
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    e_idx = jnp.where(keep, flat_expert, 0)
+    c_idx = jnp.where(keep, pos, 0)
+    return tok_idx, e_idx, c_idx, keep
+
+
+def _expert_ffn(params, buf, cfg: ModelConfig):
+    """buf: (E?, C, d) -> (E?, C, d) through the per-expert gated FFN."""
+    cd = cfg.compute_dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(cd)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(cd))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(cd))
+
+
+def _moe_local(params, xf, cfg: ModelConfig):
+    """Single-device MoE body: route, dispatch, expert FFN, combine."""
+    T, d = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, T)
+    gate_vals, gate_idx, aux = _route(params, xf, cfg)
+    tok_idx, e_idx, c_idx, keep = _dispatch_indices(gate_idx, E, C)
+    buf = jnp.zeros((E, C, d), cfg.compute_dtype)
+    src = jnp.where(keep[:, None], xf[tok_idx], 0).astype(cfg.compute_dtype)
+    buf = buf.at[e_idx, c_idx].add(src)
+    out_buf = _expert_ffn(params, buf, cfg)
+    gathered = out_buf[e_idx, c_idx]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = jnp.zeros((T, d), cfg.compute_dtype)
+    combined = combined.at[tok_idx].add(
+        gathered * gate_vals.reshape(-1)[:, None].astype(cfg.compute_dtype))
+    return combined, aux
+
+
+def moe(params, x, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    """Token-choice top-k MoE with capacity dropping.
+
+    x: (B, S, d) -> ((B, S, d), aux load-balance loss).
+
+    Two paths:
+      * replicated / no mesh: plain local dispatch (smoke tests);
+      * expert-parallel (EP): the production path — tokens stay sharded on
+        the DP axes, experts on the model axis, and dispatch runs inside
+        shard_map with an all_to_all token exchange.  In the paper's terms
+        the dispatch is a fabric many-to-many (multicast of tokens to
+        expert owners) and the combine is the mirrored reduction; both ride
+        the in-network collective support.
+    """
+    B, S, d = x.shape
+    esize = policy.mesh_axis_sizes.get(policy.model_axis or "", 1)
+    if policy.model_axis is None or esize <= 1 or cfg.n_experts % esize != 0:
+        out, aux = _moe_local(params, x.reshape(B * S, d), cfg)
+        return out.reshape(B, S, d), aux
+    return _moe_ep(params, x, cfg, policy, esize)
+
+
+def _moe_ep(params, x, cfg: ModelConfig, policy: ShardingPolicy, esize: int):
+    """Expert-parallel MoE: shard_map over (batch axes x model axis)."""
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E = cfg.n_experts
+    axis = policy.model_axis
+    bspec = policy.batch_axes or None
+    # With sequence parallelism (or moe_token_shard) each model rank owns a
+    # distinct token slice: route/dispatch those locally.  Without it, the
+    # tokens are replicated along the model axis, so every rank dispatches
+    # the same tokens and the all_to_all delivers esize redundant copies to
+    # each expert — esize x the expert FLOPs (the §Perf baseline finding).
+    want_shard = policy.seq_axis == axis or cfg.moe_token_shard
+    seq = axis if want_shard and S % esize == 0 else None
+
+    def body(xs, router, wg, wu, wd):
+        # xs: (B_local, S, d) — replicated along the model axis.
+        Tl = xs.shape[0] * xs.shape[1]
+        xf = xs.reshape(Tl, d)
+        C = moe_capacity(cfg, Tl)
+        lp = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        gate_vals, gate_idx, aux = _route(lp, xf, cfg)
+        tok_idx, e_idx, c_idx, keep = _dispatch_indices(gate_idx, E, C)
+        buf = jnp.zeros((E, C, d), cfg.compute_dtype)
+        src = jnp.where(keep[:, None], xf[tok_idx], 0).astype(cfg.compute_dtype)
+        buf = buf.at[e_idx, c_idx].add(src)
+        # dispatch: experts travel to their owners (many-to-many multicast)
+        buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1,
+                                 tiled=True)                 # (E/esize, C*esize, d)
+        out_buf = _expert_ffn(lp, buf, cfg)
+        # combine: mirrored reduction back to the token owners
+        out_buf = jax.lax.all_to_all(out_buf, axis, split_axis=1, concat_axis=0,
+                                     tiled=True)             # (E, C, d)
+        gathered = out_buf[e_idx, c_idx]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        combined = jnp.zeros((Tl, d), cfg.compute_dtype)
+        combined = combined.at[tok_idx].add(
+            gathered * gate_vals.reshape(-1)[:, None].astype(cfg.compute_dtype))
+        mean_axes = tuple(policy.batch_axes) + ((axis,) if seq else ())
+        aux = jax.lax.pmean(aux, mean_axes) if mean_axes else aux
+        return combined.reshape(xs.shape), aux
+
+    mapped = jax.shard_map(
+        body,
+        in_specs=(P(bspec, seq, None), P(None, None),
+                  P(axis, None, None), P(axis, None, None), P(axis, None, None)),
+        out_specs=(P(bspec, seq, None), P()),
+        check_vma=False,
+    )
+    return mapped(x, params["router"], params["w_gate"], params["w_up"],
+                  params["w_down"])

@@ -1,0 +1,317 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU recurrent blocks + local attention.
+
+The block pattern (default 2 recurrent : 1 local-attention) is heterogeneous,
+so layers are not scanned; the 26-layer stack is built as an explicit list.
+The RG-LRU linear recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is evaluated with ``jax.lax.associative_scan`` (log-depth parallel prefix) for
+training/prefill — the TPU-idiomatic formulation — and as a single fused step
+for decode.  A Pallas chunked-scan kernel is provided in ``repro.kernels.rglru``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as Pspec
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.attention import KVCache
+from repro.models.common import (
+    ModelConfig,
+    REPLICATED,
+    ShardingPolicy,
+    chunked_cross_entropy,
+    constrain,
+    dense_init,
+    embed_init,
+    maybe_remat,
+    rms_norm,
+)
+
+_C = 8.0  # RG-LRU "c" constant (Griffin paper)
+
+
+class HybridCache(NamedTuple):
+    """Per-layer caches; entries are None-padded to a uniform structure."""
+
+    rec_h: Any        # list per layer: (B, lru) or zeros for attn layers
+    conv: Any         # list per layer: (B, conv_width-1, lru) or zeros
+    attn: Any         # list per layer: KVCache or zeros
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rec_block(key, cfg: ModelConfig):
+    d, w = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w), cfg.param_dtype),
+        "w_gate": dense_init(ks[1], (d, w), cfg.param_dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), cfg.param_dtype, scale=0.5),
+        "lambda": jnp.ones((w,), jnp.float32) * 2.0,   # softplus(2) ~ 2.1
+        "w_input_gate": dense_init(ks[3], (w, w), cfg.param_dtype),
+        "w_a_gate": dense_init(ks[4], (w, w), cfg.param_dtype),
+        "w_out": dense_init(ks[5], (w, d), cfg.param_dtype),
+    }
+
+
+def rec_block_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    w = _lru_width(cfg)
+    return {
+        "w_x": policy.w_col(w),
+        "w_gate": policy.w_col(w),
+        "conv_w": Pspec(None, policy._model_if_divisible(w)),
+        "lambda": Pspec(policy._model_if_divisible(w)),
+        "w_input_gate": policy.w_col(w),  # note: (w, w) diag-blockable
+        "w_a_gate": policy.w_col(w),
+        "w_out": policy.w_row(w),
+    }
+
+
+def _causal_conv(x, conv_w, state=None):
+    """Depthwise causal conv along time. x: (B,S,W); conv_w: (K,W)."""
+    K = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * conv_w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+def _rg_lru_coeffs(params, xw, cfg: ModelConfig):
+    """Returns (a_t, gated_input) for the linear recurrence."""
+    r = jax.nn.sigmoid(xw.astype(jnp.float32) @ params["w_a_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xw.astype(jnp.float32) @ params["w_input_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i * xw.astype(jnp.float32)
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rec_block(params, x, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED,
+              state=None, conv_state=None):
+    """Griffin recurrent block. x: (B,S,d) -> (out, (h_last, conv_state))."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(cfg.compute_dtype))
+    xw = x @ params["w_x"].astype(cfg.compute_dtype)
+    xw = constrain(xw, policy.act_bsf(_lru_width(cfg)))
+    xw, new_conv = _causal_conv(xw, params["conv_w"].astype(cfg.compute_dtype), conv_state)
+    a, b = _rg_lru_coeffs(params, xw, cfg)
+    h = _lru_scan(a, b, state)
+    out = (h.astype(cfg.compute_dtype) * gate) @ params["w_out"].astype(cfg.compute_dtype)
+    return constrain(out, policy.act_bsd()), (h[:, -1], new_conv)
+
+
+def rec_block_decode(params, x, cfg: ModelConfig, state, conv_state,
+                     policy: ShardingPolicy = REPLICATED):
+    """Single-token recurrent step. x: (B,1,d)."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(cfg.compute_dtype))
+    xw = x @ params["w_x"].astype(cfg.compute_dtype)
+    xw, new_conv = _causal_conv(xw, params["conv_w"].astype(cfg.compute_dtype), conv_state)
+    a, b = _rg_lru_coeffs(params, xw, cfg)
+    h = a[:, 0] * state + b[:, 0]
+    out = (h[:, None].astype(cfg.compute_dtype) * gate) @ params["w_out"].astype(cfg.compute_dtype)
+    return out, (h, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _kinds(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def init(rng, cfg: ModelConfig):
+    keys = jax.random.split(rng, cfg.n_layers + 2)
+    layers = []
+    for i, kind in enumerate(_kinds(cfg)):
+        kk = jax.random.split(keys[i], 2)
+        p = {
+            "norm1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "norm2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "mlp": mlp_mod.init_mlp_params(kk[1], cfg),
+        }
+        if kind == "rec":
+            p["rec"] = init_rec_block(kk[0], cfg)
+        else:
+            p["attn"] = attn_mod.init_attn_params(kk[0], cfg)
+        layers.append(p)
+    return {
+        "embed": embed_init(keys[-2], cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    layers = []
+    for kind in _kinds(cfg):
+        p = {
+            "norm1": Pspec(None),
+            "norm2": Pspec(None),
+            "mlp": mlp_mod.mlp_param_specs(cfg, policy),
+        }
+        if kind == "rec":
+            p["rec"] = rec_block_specs(cfg, policy)
+        else:
+            p["attn"] = attn_mod.attn_param_specs(cfg, policy)
+        layers.append(p)
+    return {
+        "embed": policy.embed(cfg.padded_vocab),
+        "layers": layers,
+        "final_norm": Pspec(None),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = constrain(x, policy.act_bsd())
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    for lp, kind in zip(params["layers"], _kinds(cfg)):
+        def block(x, lp=lp, kind=kind):
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if kind == "rec":
+                h, _ = rec_block(lp["rec"], h, cfg, policy)
+            else:
+                h = attn_mod.attention(lp["attn"], h, positions, cfg,
+                                       window=cfg.attn_window, policy=policy)
+            x = x + h
+            h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            return x + mlp_mod.mlp(lp["mlp"], h, cfg, policy)
+
+        x = maybe_remat(block, cfg.remat)(x)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.zeros(())
+
+
+def loss_fn(params, batch, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    hidden, _ = forward(params, batch["tokens"], cfg, policy)
+    return chunked_cross_entropy(hidden, params["embed"], batch["labels"], cfg, policy)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    """Attention layers cache only the local window (O(window), not O(S))."""
+    w = _lru_width(cfg)
+    window = max(1, min(cfg.attn_window or max_len, max_len))
+    rec_h, conv, attn = [], [], []
+    for kind in _kinds(cfg):
+        if kind == "rec":
+            rec_h.append(jnp.zeros((batch, w), jnp.float32))
+            conv.append(jnp.zeros((batch, cfg.conv_width - 1, w), cfg.compute_dtype))
+            attn.append(None)
+        else:
+            rec_h.append(None)
+            conv.append(None)
+            attn.append(KVCache(
+                k=jnp.zeros((batch, window, cfg.n_kv_heads, cfg.head_dim), cfg.compute_dtype),
+                v=jnp.zeros((batch, window, cfg.n_kv_heads, cfg.head_dim), cfg.compute_dtype),
+            ))
+    return HybridCache(rec_h=rec_h, conv=conv, attn=attn)
+
+
+def prefill(params, tokens, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED,
+            max_len: int | None = None):
+    """Prefill: run forward, then fill the rolling caches from the tail."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    cache = init_cache(cfg, B, max_len)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    rec_h, conv, attn = list(cache.rec_h), list(cache.conv), list(cache.attn)
+
+    for i, (lp, kind) in enumerate(zip(params["layers"], _kinds(cfg))):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if kind == "rec":
+            h, (h_last, conv_state) = rec_block(lp["rec"], h, cfg, policy)
+            rec_h[i], conv[i] = h_last, conv_state
+        else:
+            q, k, v = attn_mod._qkv(lp["attn"], h, cfg)
+            from repro.models.rope import apply_rope
+
+            qr = apply_rope(q, positions, cfg.rope_theta)
+            kr = apply_rope(k, positions, cfg.rope_theta)
+            mask = attn_mod.causal_window_mask(S, S, cfg.attn_window)
+            o = attn_mod._sdpa(qr, kr, v, mask, cfg)
+            h = o @ lp["attn"]["wo"].astype(cfg.compute_dtype)
+            window = attn[i].k.shape[1]
+            take = min(window, S)
+            attn[i] = KVCache(
+                k=attn[i].k.at[:, :take].set(kr[:, -take:].astype(attn[i].k.dtype)),
+                v=attn[i].v.at[:, :take].set(v[:, -take:].astype(attn[i].v.dtype)),
+            )
+        x = x + h
+        hm = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(lp["mlp"], hm, cfg, policy)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1].astype(jnp.float32) @ params["embed"].astype(jnp.float32).T
+    return logits, HybridCache(rec_h=rec_h, conv=conv, attn=attn)
+
+
+def decode_step(params, cache: HybridCache, tokens, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = REPLICATED):
+    """One-token decode. Attention layers use a rolling window cache written
+    at ``pos % window`` with positions tracked absolutely for RoPE."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    rec_h, conv, attn = list(cache.rec_h), list(cache.conv), list(cache.attn)
+
+    for i, (lp, kind) in enumerate(zip(params["layers"], _kinds(cfg))):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if kind == "rec":
+            h, (rec_h[i], conv[i]) = rec_block_decode(lp["rec"], h, cfg,
+                                                      rec_h[i], conv[i], policy)
+        else:
+            window = attn[i].k.shape[1]
+            slot = pos % window
+            q, k_new, v_new = attn_mod._qkv(lp["attn"], h, cfg)
+            positions = jnp.full((B, 1), pos, jnp.int32)
+            from repro.models.rope import apply_rope
+
+            qr = apply_rope(q, positions, cfg.rope_theta)
+            kr = apply_rope(k_new, positions, cfg.rope_theta)
+            k = jax.lax.dynamic_update_slice(attn[i].k, kr.astype(attn[i].k.dtype),
+                                             (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(attn[i].v, v_new.astype(attn[i].v.dtype),
+                                             (0, slot, 0, 0))
+            attn[i] = KVCache(k=k, v=v)
+            ki = jnp.arange(window)[None, :]
+            # valid if the slot has been written (absolute idx <= pos)
+            abs_idx = jnp.where(ki <= slot, pos - slot + ki, pos - slot - window + ki)
+            valid = abs_idx >= jnp.maximum(0, pos - window + 1)
+            mask = valid[:, None, None, :]
+            o = attn_mod._sdpa(qr, k.astype(cfg.compute_dtype),
+                               v.astype(cfg.compute_dtype), mask, cfg)
+            h = o @ lp["attn"]["wo"].astype(cfg.compute_dtype)
+        x = x + h
+        hm = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(lp["mlp"], hm, cfg, policy)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1].astype(jnp.float32) @ params["embed"].astype(jnp.float32).T
+    return logits, HybridCache(rec_h=rec_h, conv=conv, attn=attn)

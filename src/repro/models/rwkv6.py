@@ -1,0 +1,342 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Training/prefill use the chunked linear-attention formulation (O(S * c)
+state traffic instead of O(S) sequential steps): within a chunk of length
+``c`` the contribution is an (c x c) masked matmul, across chunks the
+per-head state  S <- diag(w) S + k v^T  is carried by a lax.scan.  This is
+the TPU-idiomatic mapping (MXU-friendly chunk matmuls); a Pallas kernel of
+the inner chunk is provided in ``repro.kernels.rwkv6``.
+
+Decode is the plain single-step recurrence.
+
+Note (DESIGN.md §Arch-applicability): 40 heads (head_size 64) do not divide
+the 16-wide TP axis, so time-mix runs replicated; channel-FFN and
+embeddings are TP-sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as Pspec
+
+from repro.models.common import (
+    ModelConfig,
+    REPLICATED,
+    ShardingPolicy,
+    chunked_cross_entropy,
+    constrain,
+    dense_init,
+    embed_init,
+    maybe_remat,
+    layer_norm,
+    rms_norm,
+)
+
+LORA_DIM = 32
+CHUNK = 64
+
+
+def chunk_for(S: int) -> int:
+    """Chunk width: 64 up to 4k tokens, then S/64 (bounded sequential depth —
+    larger chunks are MXU-friendlier and keep the chunk loop ~64 deep)."""
+    if S <= 4096:
+        return min(CHUNK, S)
+    return S // 64
+
+
+class RwkvCache(NamedTuple):
+    state: Any   # (L, B, H, hd, hd) float32 time-mix state
+    shift: Any   # (L, B, 2, d) last token for token-shift (tmix, cmix)
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv_head_size
+    return cfg.d_model // hd, hd
+
+
+def init_layer(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    H, hd = _heads(cfg)
+    return {
+        "norm1": jnp.zeros((d,), cfg.param_dtype),
+        "norm2": jnp.zeros((d,), cfg.param_dtype),
+        # time-mix
+        "mix_rkvg": jnp.full((4, d), 0.5, jnp.float32),   # token-shift lerp for r,k,v,g
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": dense_init(ks[0], (d, d), cfg.param_dtype),
+        "w_k": dense_init(ks[1], (d, d), cfg.param_dtype),
+        "w_v": dense_init(ks[2], (d, d), cfg.param_dtype),
+        "w_g": dense_init(ks[3], (d, d), cfg.param_dtype),
+        "w_o": dense_init(ks[4], (d, d), cfg.param_dtype),
+        "w0": jnp.full((d,), -5.0, jnp.float32),          # base log-decay
+        "w_lora_a": dense_init(ks[5], (d, LORA_DIM), jnp.float32),
+        "w_lora_b": dense_init(ks[6], (LORA_DIM, d), jnp.float32, scale=0.1),
+        "bonus_u": jnp.zeros((H, hd), jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),              # per-head group norm scale
+        # channel-mix
+        "mix_c": jnp.full((2, d), 0.5, jnp.float32),
+        "w_ck": dense_init(ks[7], (d, f), cfg.param_dtype),
+        "w_cv": dense_init(ks[8], (f, d), cfg.param_dtype),
+        "w_cr": dense_init(ks[9], (d, d), cfg.param_dtype),
+    }
+
+
+def layer_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    d, f = cfg.d_model, cfg.d_ff
+    rep = Pspec(None, None)
+    return {
+        "norm1": Pspec(None), "norm2": Pspec(None),
+        "mix_rkvg": rep, "mix_w": Pspec(None),
+        # time-mix replicated: 40 heads % 16 != 0 (see module docstring)
+        "w_r": rep, "w_k": rep, "w_v": rep, "w_g": rep, "w_o": rep,
+        "w0": Pspec(None), "w_lora_a": rep, "w_lora_b": rep,
+        "bonus_u": rep, "ln_x": Pspec(None),
+        "mix_c": rep,
+        "w_ck": policy.w_col(f), "w_cv": policy.w_row(f), "w_cr": rep,
+    }
+
+
+def init(rng, cfg: ModelConfig):
+    keys = jax.random.split(rng, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(keys)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "embed": embed_init(k1, cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "lm_head": embed_init(k2, cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    stack = lambda s: Pspec(None, *s)
+    layer = jax.tree.map(stack, layer_specs(cfg, policy),
+                         is_leaf=lambda x: isinstance(x, Pspec))
+    return {
+        "embed": policy.embed(cfg.padded_vocab),
+        "layers": layer,
+        "final_norm": Pspec(None),
+        "lm_head": policy.embed(cfg.padded_vocab),
+    }
+
+
+def _token_shift(x, prev):
+    """x[t-1] with prev injected at t=0. x: (B,S,d); prev: (B,d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _tmix_inputs(lp, x, prev, cfg: ModelConfig):
+    xs = _token_shift(x, prev)
+    mr, mk, mv, mg = lp["mix_rkvg"].astype(cfg.compute_dtype)
+    xr = x * mr + xs * (1 - mr)
+    xk = x * mk + xs * (1 - mk)
+    xv = x * mv + xs * (1 - mv)
+    xg = x * mg + xs * (1 - mg)
+    mw = lp["mix_w"].astype(cfg.compute_dtype)
+    xw = x * mw + xs * (1 - mw)
+    r = xr @ lp["w_r"].astype(cfg.compute_dtype)
+    k = xk @ lp["w_k"].astype(cfg.compute_dtype)
+    v = xv @ lp["w_v"].astype(cfg.compute_dtype)
+    g = jax.nn.silu(xg @ lp["w_g"].astype(cfg.compute_dtype))
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ lp["w_lora_a"]) @ lp["w_lora_b"]
+    logw = -jnp.exp(jnp.clip(lp["w0"] + dd, -20.0, 2.0))    # log(decay) <= 0
+    return r, k, v, g, logw
+
+
+def chunked_wkv(r, k, v, logw, u, state0, use_scan: bool = True):
+    """Chunked RWKV-6 recurrence.
+
+    r,k,v: (B,S,H,hd); logw: (B,S,H,hd) log-decay; u: (H,hd) bonus;
+    state0: (B,H,hd,hd).  Returns (out (B,S,H,hd), state (B,H,hd,hd)).
+    """
+    B, S, H, hd = r.shape
+    c = chunk_for(S)
+    assert S % c == 0, f"sequence {S} not divisible by chunk {c}"
+    n = S // c
+    rs = r.reshape(B, n, c, H, hd).astype(jnp.float32)
+    ks = k.reshape(B, n, c, H, hd).astype(jnp.float32)
+    vs = v.reshape(B, n, c, H, hd).astype(jnp.float32)
+    lw = logw.reshape(B, n, c, H, hd)
+
+    def chunk_step(state, xs):
+        rc, kc, vc, lwc = xs  # (B,c,H,hd)
+        # cumulative decays: P_t = prod_{s<t} w_s (exclusive), A = prod over chunk
+        cum = jnp.cumsum(lwc, axis=1)              # inclusive sum of logs
+        P_excl = cum - lwc                         # exclusive
+        A = cum[:, -1]                             # (B,H,hd)
+        # inter-chunk: out_t += (r_t * P_t_excl... r_t interacts with decayed state
+        r_dec = rc * jnp.exp(P_excl)               # (B,c,H,hd)
+        out_inter = jnp.einsum("bchi,bhij->bchj", r_dec, state)
+        # intra-chunk: pair (t, s<t): factor prod_{s<u<t} ... = exp(P_excl_t - cum_s)
+        q_ = rc * jnp.exp(P_excl)                  # (B,c,H,hd)
+        k_ = kc * jnp.exp(-cum)                    # (B,c,H,hd)
+        att = jnp.einsum("bthi,bshi->bhts", q_, k_)
+        mask = jnp.tril(jnp.ones((c, c)), k=-1)[None, None]
+        att = att * mask
+        # bonus diagonal (current token): r_t . (u * k_t)
+        diag = jnp.einsum("bthi,bthi->bth", rc, u[None, None] * kc)
+        out_intra = jnp.einsum("bhts,bshj->bthj", att, vc)
+        out_diag = diag[..., None] * vc
+        # state update: S' = exp(A) * S + sum_s exp(A - cum_s) k_s v_s^T
+        k_dec = kc * jnp.exp(A[:, None] - cum)
+        state = jnp.exp(A)[..., None] * state + jnp.einsum("bshi,bshj->bhij", k_dec, vc)
+        return state, out_inter + out_intra + out_diag
+
+    if use_scan:
+        state, outs = jax.lax.scan(
+            chunk_step, state0,
+            (rs.swapaxes(0, 1), ks.swapaxes(0, 1), vs.swapaxes(0, 1),
+             lw.swapaxes(0, 1)))
+        out = outs.swapaxes(0, 1).reshape(B, S, H, hd)
+    else:
+        state, chunks_out = state0, []
+        for i in range(n):
+            state, o = chunk_step(state, (rs[:, i], ks[:, i], vs[:, i], lw[:, i]))
+            chunks_out.append(o)
+        out = jnp.stack(chunks_out, axis=1).reshape(B, S, H, hd)
+    return out, state
+
+
+def time_mix(lp, x, prev, state0, cfg: ModelConfig):
+    B, S, d = x.shape
+    H, hd = _heads(cfg)
+    r, k, v, g, logw = _tmix_inputs(lp, x, prev, cfg)
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    lwh = logw.reshape(B, S, H, hd)
+    out, state = chunked_wkv(rh, kh, vh, lwh, lp["bonus_u"], state0,
+                             use_scan=cfg.scan_layers)
+    out = out.reshape(B, S, d)
+    # per-head group norm (approximated by RMS over head dim via ln_x scale)
+    out = rms_norm(out.astype(cfg.compute_dtype), lp["ln_x"].astype(cfg.compute_dtype) - 1.0)
+    out = out * g
+    return out @ lp["w_o"].astype(cfg.compute_dtype), state, x[:, -1]
+
+
+def channel_mix(lp, x, prev, cfg: ModelConfig, policy: ShardingPolicy):
+    xs = _token_shift(x, prev)
+    mk, mr = lp["mix_c"].astype(cfg.compute_dtype)
+    xk = x * mk + xs * (1 - mk)
+    xr = x * mr + xs * (1 - mr)
+    kk = jnp.square(jax.nn.relu(xk @ lp["w_ck"].astype(cfg.compute_dtype)))
+    kk = constrain(kk, policy.act_bsf(cfg.d_ff))
+    kv = kk @ lp["w_cv"].astype(cfg.compute_dtype)
+    return jax.nn.sigmoid(xr @ lp["w_cr"].astype(cfg.compute_dtype)) * kv, x[:, -1]
+
+
+def forward(params, tokens, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    B, S = tokens.shape
+    H, hd = _heads(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = constrain(x, policy.act_bsd())
+    zeros_state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    zeros_prev = jnp.zeros((B, cfg.d_model), cfg.compute_dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h, _, _ = time_mix(lp, h, zeros_prev, zeros_state, cfg)
+        x = x + constrain(h, policy.act_bsd())
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        h, _ = channel_mix(lp, h, zeros_prev, cfg, policy)
+        return x + h, None
+
+    body = maybe_remat(body, cfg.remat)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["layers"]))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.zeros(())
+
+
+def loss_fn(params, batch, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    hidden, _ = forward(params, batch["tokens"], cfg, policy)
+    return chunked_cross_entropy(hidden, params["lm_head"], batch["labels"], cfg, policy)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> RwkvCache:
+    H, hd = _heads(cfg)
+    return RwkvCache(
+        state=jnp.zeros((cfg.n_layers, batch, H, hd, hd), jnp.float32),
+        shift=jnp.zeros((cfg.n_layers, batch, 2, cfg.d_model), cfg.compute_dtype),
+    )
+
+
+def prefill(params, tokens, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED,
+            max_len: int | None = None):
+    B, S = tokens.shape
+    H, hd = _heads(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    zeros_state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    zeros_prev = jnp.zeros((B, cfg.d_model), cfg.compute_dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h, state, shift_t = time_mix(lp, h, zeros_prev, zeros_state, cfg)
+        x = x + h
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        h2, shift_c = channel_mix(lp, h2, zeros_prev, cfg, policy)
+        shifts = jnp.stack([shift_t, shift_c], axis=1)
+        return x + h2, (state, shifts)
+
+    if cfg.scan_layers:
+        x, (states, shifts) = jax.lax.scan(body, x, params["layers"])
+    else:
+        ss, sh = [], []
+        for i in range(cfg.n_layers):
+            x, (st, sf) = body(x, jax.tree.map(lambda a: a[i], params["layers"]))
+            ss.append(st)
+            sh.append(sf)
+        states, shifts = jnp.stack(ss), jnp.stack(sh)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32).T
+    return logits, RwkvCache(state=states, shift=shifts)
+
+
+def decode_step(params, cache: RwkvCache, tokens, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = REPLICATED):
+    B = tokens.shape[0]
+    H, hd = _heads(cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)  # (B,1,d)
+
+    def body(x, xs):
+        lp, state0, shifts = xs
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        r, k, v, g, logw = _tmix_inputs(lp, h, shifts[:, 0], cfg)
+        rh = r.reshape(B, H, hd); kh = k.reshape(B, H, hd); vh = v.reshape(B, H, hd)
+        w = jnp.exp(logw.reshape(B, H, hd).astype(jnp.float32))
+        u = lp["bonus_u"]
+        kv = jnp.einsum("bhi,bhj->bhij", kh.astype(jnp.float32), vh.astype(jnp.float32))
+        out = jnp.einsum("bhi,bhij->bhj", rh.astype(jnp.float32),
+                         state0 + u[None, ..., None] * kv)
+        state = w[..., None] * state0 + kv
+        o = rms_norm(out.reshape(B, 1, -1).astype(cfg.compute_dtype),
+                     lp["ln_x"].astype(cfg.compute_dtype) - 1.0)
+        o = (o * g) @ lp["w_o"].astype(cfg.compute_dtype)
+        new_shift_t = h[:, -1]
+        x = x + o
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        h2o, new_shift_c = channel_mix(lp, h2, shifts[:, 1], cfg, policy)
+        x = x + h2o
+        return x, (state, jnp.stack([new_shift_t, new_shift_c], axis=1))
+
+    if cfg.scan_layers:
+        x, (states, shifts) = jax.lax.scan(body, x, (params["layers"],
+                                                     cache.state, cache.shift))
+    else:
+        ss, sh = [], []
+        for i in range(cfg.n_layers):
+            x, (st, sf) = body(x, (jax.tree.map(lambda a: a[i], params["layers"]),
+                                   cache.state[i], cache.shift[i]))
+            ss.append(st)
+            sh.append(sf)
+        states, shifts = jnp.stack(ss), jnp.stack(sh)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32).T
+    return logits, RwkvCache(state=states, shift=shifts)

@@ -1,0 +1,259 @@
+"""Decoder-only transformer LM covering the dense / MoE / local-global archs.
+
+Layers are scanned (stacked parameters with a leading L dimension) so the
+compiled HLO is O(1) in depth.  Per-layer attention windows are passed as a
+scanned integer array, which lets gemma3's 5:1 local:global pattern share
+one homogeneous scan body (window == 0 means full attention).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.attention import KVCache
+from repro.models.common import (
+    ModelConfig,
+    REPLICATED,
+    ShardingPolicy,
+    chunked_cross_entropy,
+    constrain,
+    dense_init,
+    embed_init,
+    maybe_remat,
+    rms_norm,
+)
+
+
+def layer_windows_list(cfg: ModelConfig) -> list[int]:
+    """Per-layer attention window (0 = full causal), as static ints."""
+    L = cfg.n_layers
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio
+        return [0 if (i + 1) % (r + 1) == 0 else cfg.attn_window for i in range(L)]
+    if cfg.attn_window > 0:
+        return [cfg.attn_window] * L
+    return [0] * L
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray(layer_windows_list(cfg), jnp.int32)
+
+
+def _layer_at(layers, i: int):
+    return jax.tree.map(lambda a: a[i], layers)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init(rng, cfg: ModelConfig):
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+
+    def layer_init(key):
+        ka, km = jax.random.split(key)
+        p = {
+            "norm1": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "norm2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+            "attn": attn_mod.init_attn_params(ka, cfg),
+        }
+        if cfg.n_experts:
+            p["moe"] = mlp_mod.init_moe_params(km, cfg)
+        else:
+            p["mlp"] = mlp_mod.init_mlp_params(km, cfg)
+        return p
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(layer_init)(layer_keys)
+    params = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, cfg.padded_vocab, cfg.d_model, cfg.param_dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    def stack(spec: P) -> P:
+        return P(None, *spec)
+
+    layer = {
+        "norm1": P(None),
+        "norm2": P(None),
+        "attn": jax.tree.map(stack, attn_mod.attn_param_specs(cfg, policy),
+                             is_leaf=lambda x: isinstance(x, P)),
+    }
+    if cfg.n_experts:
+        layer["moe"] = jax.tree.map(stack, mlp_mod.moe_param_specs(cfg, policy),
+                                    is_leaf=lambda x: isinstance(x, P))
+    else:
+        layer["mlp"] = jax.tree.map(stack, mlp_mod.mlp_param_specs(cfg, policy),
+                                    is_leaf=lambda x: isinstance(x, P))
+    layer = {
+        "norm1": P(None, None),
+        "norm2": P(None, None),
+        **{k: v for k, v in layer.items() if k in ("attn", "moe", "mlp")},
+    }
+    specs = {
+        "embed": policy.embed(cfg.padded_vocab),
+        "layers": layer,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = policy.embed(cfg.padded_vocab)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(layer_params, x, positions, window, cfg: ModelConfig,
+               policy: ShardingPolicy):
+    h = rms_norm(x, layer_params["norm1"], cfg.norm_eps)
+    h = attn_mod.attention(layer_params["attn"], h, positions, cfg,
+                           window=window, policy=policy)
+    x = x + h
+    h = rms_norm(x, layer_params["norm2"], cfg.norm_eps)
+    if cfg.n_experts:
+        h, aux = mlp_mod.moe(layer_params["moe"], h, cfg, policy)
+    else:
+        h, aux = mlp_mod.mlp(layer_params["mlp"], h, cfg, policy), 0.0
+    return x + h, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    """tokens: (B, S) -> hidden (B, S, d), aux_loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = constrain(x, policy.act_bsd())
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_params, window = xs
+        x, a = _layer_fwd(layer_params, x, positions, window, cfg, policy)
+        return (x, aux + a), None
+
+    body = maybe_remat(body, cfg.remat)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros(())),
+                                   (params["layers"], windows))
+    else:
+        aux = jnp.zeros(())
+        for i, w in enumerate(layer_windows_list(cfg)):
+            (x, aux), _ = body((x, aux), (_layer_at(params["layers"], i),
+                                          jnp.asarray(w, jnp.int32)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    hidden, aux = forward(params, batch["tokens"], cfg, policy)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    loss = chunked_cross_entropy(hidden, head, batch["labels"], cfg, policy)
+    return loss + 0.01 * aux
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def prefill(params, tokens, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED,
+            max_len: int | None = None):
+    """Full-sequence prefill; returns (last-token logits, KV cache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    x = constrain(x, policy.act_bsd())
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        layer_params, window = xs
+        h = rms_norm(x, layer_params["norm1"], cfg.norm_eps)
+        # re-compute q/k/v so we can emit the cache entries
+        q, k, v = attn_mod._qkv(layer_params["attn"], h, cfg)
+        from repro.models.rope import apply_rope
+
+        qr = apply_rope(q, positions, cfg.rope_theta)
+        kr = apply_rope(k, positions, cfg.rope_theta)
+        mask = attn_mod.causal_window_mask(S, S, window)
+        o = attn_mod._sdpa(qr, kr, v, mask, cfg)
+        o = o @ layer_params["attn"]["wo"].astype(cfg.compute_dtype)
+        x = x + constrain(o, policy.act_bsd())
+        h = rms_norm(x, layer_params["norm2"], cfg.norm_eps)
+        if cfg.n_experts:
+            h, _ = mlp_mod.moe(layer_params["moe"], h, cfg, policy)
+        else:
+            h = mlp_mod.mlp(layer_params["mlp"], h, cfg, policy)
+        x = x + h
+        pad = max_len - S
+        kc = jnp.pad(kr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (kc, vc)
+
+    body = maybe_remat(body, cfg.remat)
+    if cfg.scan_layers:
+        x, (k_all, v_all) = jax.lax.scan(body, x, (params["layers"], windows))
+    else:
+        ks, vs = [], []
+        for i, w in enumerate(layer_windows_list(cfg)):
+            x, (kc, vc) = body(x, (_layer_at(params["layers"], i),
+                                   jnp.asarray(w, jnp.int32)))
+            ks.append(kc)
+            vs.append(vc)
+        k_all, v_all = jnp.stack(ks), jnp.stack(vs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = x[:, -1].astype(jnp.float32) @ head.astype(jnp.float32).T
+    return logits, KVCache(k=k_all, v=v_all)
+
+
+def decode_step(params, cache: KVCache, tokens, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = REPLICATED):
+    """One decode step. tokens: (B, 1); pos: scalar int32 (current position)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        layer_params, window, k_l, v_l = xs
+        h = rms_norm(x, layer_params["norm1"], cfg.norm_eps)
+        o, new_cache = attn_mod.attention_decode(
+            layer_params["attn"], h, KVCache(k_l, v_l), pos, cfg,
+            window=window, policy=policy)
+        x = x + o
+        h = rms_norm(x, layer_params["norm2"], cfg.norm_eps)
+        if cfg.n_experts:
+            h, _ = mlp_mod.moe(layer_params["moe"], h, cfg, policy)
+        else:
+            h = mlp_mod.mlp(layer_params["mlp"], h, cfg, policy)
+        return x + h, (new_cache.k, new_cache.v)
+
+    if cfg.scan_layers:
+        x, (k_all, v_all) = jax.lax.scan(body, x, (params["layers"], windows,
+                                                   cache.k, cache.v))
+    else:
+        ks, vs = [], []
+        for i, w in enumerate(layer_windows_list(cfg)):
+            x, (kc, vc) = body(x, (_layer_at(params["layers"], i),
+                                   jnp.asarray(w, jnp.int32),
+                                   cache.k[i], cache.v[i]))
+            ks.append(kc)
+            vs.append(vc)
+        k_all, v_all = jnp.stack(ks), jnp.stack(vs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = x[:, -1].astype(jnp.float32) @ head.astype(jnp.float32).T
+    return logits, KVCache(k=k_all, v=v_all)

@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings (B, encoder_len, d_model).  The decoder is a
+standard pre-LN transformer with causal self-attention + cross-attention.
+LayerNorm (not RMSNorm) and non-gated GELU MLPs, matching the original
+architecture.  8 heads < 16-wide TP axis -> attention replicated; the MLPs
+and the 51.9k-vocab projection are TP-sharded (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as Pspec
+
+from repro.models import attention as attn_mod
+from repro.models.attention import KVCache
+from repro.models.common import (
+    ModelConfig,
+    REPLICATED,
+    ShardingPolicy,
+    chunked_cross_entropy,
+    constrain,
+    dense_init,
+    embed_init,
+    layer_norm,
+    maybe_remat,
+)
+
+
+class WhisperCache(NamedTuple):
+    self_kv: KVCache   # (L, B, S_max, kv, hd)
+    memory: Any        # (B, enc_len, d) encoded audio
+
+
+def _mlp_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, (cfg.d_model, cfg.d_ff), cfg.param_dtype),
+        "b1": jnp.zeros((cfg.d_ff,), cfg.param_dtype),
+        "w2": dense_init(k2, (cfg.d_ff, cfg.d_model), cfg.param_dtype),
+        "b2": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    return {
+        "w1": policy.w_col(cfg.d_ff),
+        "b1": Pspec(policy._model_if_divisible(cfg.d_ff)),
+        "w2": policy.w_row(cfg.d_ff),
+        "b2": Pspec(None),
+    }
+
+
+def _mlp(p, x, cfg: ModelConfig, policy: ShardingPolicy):
+    h = jax.nn.gelu(x @ p["w1"].astype(cfg.compute_dtype) + p["b1"].astype(cfg.compute_dtype))
+    h = constrain(h, policy.act_bsf(cfg.d_ff))
+    return h @ p["w2"].astype(cfg.compute_dtype) + p["b2"].astype(cfg.compute_dtype)
+
+
+def _ln_init(cfg):
+    return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+            "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def init(rng, cfg: ModelConfig):
+    n_enc = cfg.encoder_layers or cfg.n_layers
+    keys = jax.random.split(rng, 4)
+
+    def enc_layer(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": _ln_init(cfg), "ln2": _ln_init(cfg),
+            "attn": attn_mod.init_attn_params(k1, cfg),
+            "mlp": _mlp_init(k2, cfg),
+        }
+
+    def dec_layer(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": _ln_init(cfg), "ln2": _ln_init(cfg), "ln3": _ln_init(cfg),
+            "self_attn": attn_mod.init_attn_params(k1, cfg),
+            "cross_attn": attn_mod.init_attn_params(k2, cfg),
+            "mlp": _mlp_init(k3, cfg),
+        }
+
+    return {
+        "enc_pos": (jax.random.normal(keys[0], (cfg.encoder_len, cfg.d_model)) * 0.02
+                    ).astype(cfg.param_dtype),
+        "dec_embed": embed_init(keys[1], cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(keys[2], n_enc)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(keys[3], cfg.n_layers)),
+        "enc_norm": _ln_init(cfg),
+        "dec_norm": _ln_init(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    stack = lambda s: Pspec(None, *s)
+    ln = {"scale": Pspec(None, None), "bias": Pspec(None, None)}
+    attn = jax.tree.map(stack, attn_mod.attn_param_specs(cfg, policy),
+                        is_leaf=lambda x: isinstance(x, Pspec))
+    mlp = jax.tree.map(stack, _mlp_specs(cfg, policy),
+                       is_leaf=lambda x: isinstance(x, Pspec))
+    return {
+        "enc_pos": Pspec(None, None),
+        "dec_embed": policy.embed(cfg.padded_vocab),
+        "enc_layers": {"ln1": ln, "ln2": ln, "attn": attn, "mlp": mlp},
+        "dec_layers": {"ln1": ln, "ln2": ln, "ln3": ln,
+                       "self_attn": attn, "cross_attn": attn, "mlp": mlp},
+        "enc_norm": {"scale": Pspec(None), "bias": Pspec(None)},
+        "dec_norm": {"scale": Pspec(None), "bias": Pspec(None)},
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    """frames: (B, enc_len, d_model) precomputed conv-frontend embeddings."""
+    x = frames.astype(cfg.compute_dtype) + params["enc_pos"].astype(cfg.compute_dtype)[None]
+    x = constrain(x, policy.act_bsd())
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], x.shape[:2])
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        h = attn_mod.attention(lp["attn"], h, positions, cfg, policy=policy,
+                               bidirectional=True)
+        x = x + h
+        h = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        return x + _mlp(lp["mlp"], h, cfg, policy), None
+
+    body = maybe_remat(body, cfg.remat)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        n_enc = cfg.encoder_layers or cfg.n_layers
+        for i in range(n_enc):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return layer_norm(x, params["enc_norm"]["scale"], params["enc_norm"]["bias"])
+
+
+def _decoder(params, tokens, memory, cfg: ModelConfig, policy: ShardingPolicy,
+             collect_cache: bool = False, max_len: int | None = None):
+    B, S = tokens.shape
+    x = params["dec_embed"][tokens].astype(cfg.compute_dtype)
+    x = constrain(x, policy.act_bsd())
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    max_len = max_len or S
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q, k, v = attn_mod._qkv(lp["self_attn"], h, cfg)
+        from repro.models.rope import apply_rope
+
+        qr = apply_rope(q, positions, cfg.rope_theta)
+        kr = apply_rope(k, positions, cfg.rope_theta)
+        mask = attn_mod.causal_window_mask(S, S, 0)
+        o = attn_mod._sdpa(qr, kr, v, mask, cfg)
+        x = x + o @ lp["self_attn"]["wo"].astype(cfg.compute_dtype)
+        h = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        x = x + attn_mod.cross_attention(lp["cross_attn"], h, memory, cfg, policy)
+        h = layer_norm(x, lp["ln3"]["scale"], lp["ln3"]["bias"])
+        x = x + _mlp(lp["mlp"], h, cfg, policy)
+        if collect_cache:
+            pad = max_len - S
+            kc = jnp.pad(kr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, (kc, vc)
+        return x, None
+
+    body = maybe_remat(body, cfg.remat)
+    if cfg.scan_layers:
+        x, kv = jax.lax.scan(body, x, params["dec_layers"])
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            x, kvi = body(x, jax.tree.map(lambda a: a[i], params["dec_layers"]))
+            if collect_cache:
+                ks.append(kvi[0])
+                vs.append(kvi[1])
+        kv = (jnp.stack(ks), jnp.stack(vs)) if collect_cache else None
+    x = layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    return x, kv
+
+
+def loss_fn(params, batch, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED):
+    memory = encode(params, batch["frames"], cfg, policy)
+    hidden, _ = _decoder(params, batch["tokens"], memory, cfg, policy)
+    return chunked_cross_entropy(hidden, params["dec_embed"], batch["labels"], cfg, policy)
+
+
+def prefill(params, batch, cfg: ModelConfig, policy: ShardingPolicy = REPLICATED,
+            max_len: int | None = None):
+    """batch: {frames, tokens} -> (last logits, WhisperCache)."""
+    memory = encode(params, batch["frames"], cfg, policy)
+    hidden, kv = _decoder(params, batch["tokens"], memory, cfg, policy,
+                          collect_cache=True, max_len=max_len)
+    logits = hidden[:, -1].astype(jnp.float32) @ params["dec_embed"].astype(jnp.float32).T
+    return logits, WhisperCache(self_kv=KVCache(k=kv[0], v=kv[1]), memory=memory)
+
+
+def decode_step(params, cache: WhisperCache, tokens, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = REPLICATED):
+    B = tokens.shape[0]
+    x = params["dec_embed"][tokens].astype(cfg.compute_dtype)
+
+    def body(x, xs):
+        lp, k_l, v_l = xs
+        h = layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        o, new_kv = attn_mod.attention_decode(lp["self_attn"], h, KVCache(k_l, v_l),
+                                              pos, cfg, policy=policy)
+        x = x + o
+        h = layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        x = x + attn_mod.cross_attention(lp["cross_attn"], h, cache.memory, cfg, policy)
+        h = layer_norm(x, lp["ln3"]["scale"], lp["ln3"]["bias"])
+        x = x + _mlp(lp["mlp"], h, cfg, policy)
+        return x, (new_kv.k, new_kv.v)
+
+    if cfg.scan_layers:
+        x, (k_all, v_all) = jax.lax.scan(body, x, (params["dec_layers"],
+                                                   cache.self_kv.k, cache.self_kv.v))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            x, (kc, vc) = body(x, (jax.tree.map(lambda a: a[i], params["dec_layers"]),
+                                   cache.self_kv.k[i], cache.self_kv.v[i]))
+            ks.append(kc)
+            vs.append(vc)
+        k_all, v_all = jnp.stack(ks), jnp.stack(vs)
+    x = layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"])
+    logits = x[:, -1].astype(jnp.float32) @ params["dec_embed"].astype(jnp.float32).T
+    return logits, WhisperCache(self_kv=KVCache(k=k_all, v=v_all), memory=cache.memory)

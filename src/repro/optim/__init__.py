@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_state_specs  # noqa: F401
+from repro.optim.compress import compress_int8, decompress_int8, compressed_mean  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

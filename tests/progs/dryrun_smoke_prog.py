@@ -1,0 +1,74 @@
+"""Fast plumbing check of the dry-run path on a small (2, 4) mesh.
+
+Uses the REAL full-size configs for the cheapest archs and smoke-size
+overrides for the big ones — the goal here is exercising build_cell /
+lower / compile / roofline extraction for every family and every shape
+kind, not the production mesh (that is launch/dryrun.py).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.dryrun import run_cell
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def adapt(cfg):
+    """Shrink big configs so an 8-host-device compile is fast."""
+    return dataclasses.replace(
+        get_smoke_config(cfg.name), name=cfg.name,
+        d_model=64, n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 4) or 4,
+        head_dim=16, d_ff=128, vocab=512, loss_chunk=64)
+
+
+CASES = [
+    ("qwen1_5_0_5b", "train_4k"),
+    ("qwen1_5_0_5b", "decode_32k"),
+    ("phi3_5_moe", "train_4k"),
+    ("gemma3_12b", "prefill_32k"),
+    ("gemma3_12b", "long_500k"),
+    ("rwkv6_3b", "long_500k"),
+    ("recurrentgemma_2b", "decode_32k"),
+    ("whisper_base", "train_4k"),
+    ("whisper_base", "decode_32k"),
+]
+
+SHRINK = {"shape_overrides": True}
+
+
+def shrink_shape(shape):
+    import repro.launch.shapes as shp
+
+    small = {
+        "train_4k": shp.ShapeCell("train_4k", "train", 128, 8),
+        "prefill_32k": shp.ShapeCell("prefill_32k", "prefill", 256, 8),
+        "decode_32k": shp.ShapeCell("decode_32k", "decode", 256, 8),
+        "long_500k": shp.ShapeCell("long_500k", "decode", 1024, 1),
+    }
+    shp.SHAPES.update(small)
+
+
+if __name__ == "__main__":
+    shrink_shape(None)
+    failures = []
+    for arch, shape in CASES:
+        cfg = adapt(get_config(arch))
+        rec = run_cell(arch, shape, cfg_override=cfg, mesh=mesh, mesh_name="2x4")
+        if rec["status"] != "ok":
+            failures.append((arch, shape, rec.get("error", rec.get("reason"))))
+        else:
+            assert rec["hlo_flops"] > 0, (arch, shape, "zero flops")
+            assert rec["bytes_per_device"] > 0, (arch, shape, "zero memory")
+    if failures:
+        for f in failures:
+            print("FAIL:", f)
+        raise SystemExit(1)
+    print("ALL OK")

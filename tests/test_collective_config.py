@@ -1,0 +1,27 @@
+"""CollectiveConfig schedule selection follows the paper's models."""
+
+from repro.core.collectives import CollectiveConfig, choose_schedule
+from repro.core.noc.params import PAPER_MICRO
+
+
+def test_native_preferred_when_hw_available():
+    cfg = CollectiveConfig(schedule="native", hw_collectives=True)
+    assert cfg.resolve(nbytes=4096, group=8) == "native"
+
+
+def test_fallback_uses_paper_model():
+    cfg = CollectiveConfig(schedule="native", hw_collectives=False)
+    # small transfers -> tree (latency-bound); large -> pipelined (Fig 5a)
+    assert cfg.resolve(nbytes=1024, group=4) == "tree"
+    assert cfg.resolve(nbytes=32 * 1024, group=4) == "pipelined"
+
+
+def test_explicit_schedule_respected():
+    cfg = CollectiveConfig(schedule="chain")
+    assert cfg.resolve(nbytes=10**6, group=16) == "chain"
+
+
+def test_choose_schedule_crossover_moves_with_size():
+    small = choose_schedule(512, 4, PAPER_MICRO)
+    large = choose_schedule(128 * 1024, 4, PAPER_MICRO)
+    assert small == "tree" and large == "pipelined"

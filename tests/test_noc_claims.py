@@ -1,0 +1,19 @@
+"""Every numeric claim in the paper, asserted against our models.
+
+This is the faithfulness gate for the reproduction: the analytical models
+(Eqs 1-6, 10-15), the GEMM-level composition (Section 4.3) and the energy
+model (Table 1 / Fig 10) must land within the declared tolerance of every
+claim in the text.
+"""
+
+import pytest
+
+from repro.core.noc.calibrate import all_claims
+
+
+@pytest.mark.parametrize("claim", all_claims(), ids=lambda c: c.name)
+def test_paper_claim(claim):
+    assert claim.ok, (
+        f"{claim.name}: paper={claim.paper_value}, ours={claim.achieved:.3f}, "
+        f"tol={claim.rel_tol:.0%}"
+    )

@@ -1,0 +1,96 @@
+"""Property-based tests on the NoC model invariants (hypothesis).
+
+These encode the *structural* facts the paper's equations must satisfy,
+independent of calibration constants.
+"""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.noc import model as m
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import NoCParams, PAPER_MICRO
+from repro.core.topology import Coord, Mesh2D, Submesh
+
+sizes = st.integers(4, 2048)          # beats
+clusters = st.sampled_from([2, 4, 8, 16])
+
+
+@given(n=sizes, c=clusters)
+@settings(max_examples=40, deadline=None)
+def test_hw_multicast_never_slower_than_software(n, c):
+    p = PAPER_MICRO
+    hw = m.multicast_hw(p, n, c)
+    assert hw <= m.multicast_naive(p, n, c)
+    assert hw <= m.multicast_seq(p, n, c)
+    assert hw <= m.multicast_tree(p, n, c)
+
+
+@given(n=sizes, c=clusters)
+@settings(max_examples=40, deadline=None)
+def test_hw_is_the_k_eq_n_limit_of_seq(n, c):
+    """Fig 5b: T_seq -> T_hw as per-batch overheads -> 0 and k -> n."""
+    p0 = dataclasses.replace(PAPER_MICRO, alpha0=0.0, delta=0.0, hop_cycles=0.0)
+    t_seq_limit = m.multicast_seq(p0, n, c, k=n)
+    t_hw = m.multicast_hw(PAPER_MICRO, n, c)
+    # the zero-overhead pipelined schedule matches HW up to alpha
+    assert abs(t_seq_limit - (t_hw - PAPER_MICRO.alpha(1))) <= c + 1
+
+
+@given(n=sizes, c=clusters)
+@settings(max_examples=40, deadline=None)
+def test_models_monotone_in_size(n, c):
+    p = PAPER_MICRO
+    for fn in (m.multicast_naive, m.multicast_seq, m.multicast_tree,
+               m.multicast_hw, m.reduction_seq, m.reduction_tree, m.reduction_hw):
+        assert fn(p, n + 16, c) >= fn(p, n, c) - 1e-9
+
+
+@given(n=sizes)
+@settings(max_examples=20, deadline=None)
+def test_2d_reduction_slower_than_1d(n):
+    p = PAPER_MICRO
+    assert m.reduction_hw(p, n, 4, 4) >= m.reduction_hw(p, n, 4, 1)
+    # ... but only by a bounded factor (the paper's 2-input-join argument)
+    assert m.reduction_hw(p, n, 4, 4) <= 2.5 * m.reduction_hw(p, n, 4, 1) + 100
+
+
+@given(n=st.integers(16, 512), c=st.sampled_from([2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_netsim_hw_multicast_matches_model_property(n, c):
+    p = NoCParams()
+    mesh = Mesh2D(4, 4)
+    sim = NoCSim(mesh, p)
+    sim.add_multicast(Coord(0, 0), Submesh(0, 0, c, 1).multi_address(),
+                      nbytes=n * p.beat_bytes)
+    t = sim.run()
+    model = m.multicast_hw(p, n, c, 1)
+    assert abs(t - model) <= 0.25 * model + 16
+
+
+@given(k=st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_optimal_k_never_worse_than_fixed_k(k):
+    p = PAPER_MICRO
+    n = 512
+    assert m.multicast_seq(p, n, 8) <= m.multicast_seq(p, n, 8, k=min(k, n)) + 1e-9
+    assert m.reduction_seq(p, n, 8) <= m.reduction_seq(p, n, 8, k=min(k, n)) + 1e-9
+
+
+def test_summa_speedup_grows_with_mesh_until_compute_bound():
+    p = dataclasses.replace(PAPER_MICRO, alpha0=20.0, delta=8.0)
+    pts = m.summa_sweep(p)
+    sp = [pt.speedup for pt in pts]
+    assert sp == sorted(sp), "SUMMA HW advantage must grow with mesh size"
+
+
+def test_energy_counts_scale_quadratically_in_mesh():
+    from repro.core.noc.energy import summa_counts
+
+    c16 = summa_counts(16, hw=True)
+    c32 = summa_counts(32, hw=True)
+    assert c32.gemm_op == pytest.approx(4 * c16.gemm_op)
+    assert c32.hop_b / c16.hop_b == pytest.approx(
+        (2 * 32 * 31) / (2 * 16 * 15), rel=1e-6)

@@ -1,0 +1,73 @@
+"""Roofline extraction: HLO collective parsing + term arithmetic."""
+
+import pytest
+
+from repro.launch.roofline import Roofline, collective_bytes, model_flops_estimate
+
+HLO_SAMPLE = """
+  %all-gather = f32[512,1024]{0,1} all-gather(%copy), channel_id=1, replica_groups=[2,4]<=[8]
+  %ar = bf16[1024]{0} all-reduce(%x), channel_id=2, to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = bf16[128,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ag2 = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-gather-start(%w), channel_id=3
+  %ag2d = f32[16,16]{1,0} all-gather-done(%ag2)
+  %a2a = f32[8,8]{1,0} all-to-all(%v), dimensions={0}
+  %meta = f32[4]{0} add(%a, %b), metadata={op_name="jit(f)/all_gather_fake"}
+"""
+
+
+def test_collective_bytes_parses_every_kind_once():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 512 * 1024 * 4 + 16 * 16 * 4  # sync + start only
+    assert out["all-reduce"] == 1024 * 2
+    assert out["reduce-scatter"] == 64 * 32 * 4
+    assert out["collective-permute"] == 128 * 128 * 2
+    assert out["all-to-all"] == 8 * 8 * 4
+    # metadata mentions must not be counted
+    assert sum(out.values()) < 512 * 1024 * 4 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="16x16", chips=256,
+                 hlo_flops=197e12 * 256,          # exactly 1s of compute
+                 hlo_bytes=819e9 * 256 * 2,       # 2s of memory
+                 coll_bytes=50e9 * 256 * 0.5,     # 0.5s of collectives
+                 coll_breakdown={}, model_flops=197e12 * 256 * 0.8,
+                 bytes_per_device=1e9)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.5)
+    assert r.useful_flops_ratio == pytest.approx(0.8)
+
+
+def test_model_flops_estimate_kinds():
+    from repro.configs import get_config
+
+    cfg = get_config("yi_6b")
+    n = cfg.n_active_params
+    assert model_flops_estimate(cfg, "train", 4096, 256) == 6.0 * n * 4096 * 256
+    assert model_flops_estimate(cfg, "prefill", 32768, 32) == 2.0 * n * 32768 * 32
+    assert model_flops_estimate(cfg, "decode", 32768, 128) == 2.0 * n * 128
+
+
+def test_moe_active_vs_total_params():
+    from repro.configs import get_config
+
+    phi = get_config("phi3_5_moe")
+    assert phi.n_params > 3 * phi.n_active_params  # 16 experts, top-2
+    assert 35e9 < phi.n_params < 50e9              # "42b" class
+    assert 5e9 < phi.n_active_params < 9e9         # "a6.6b" class
+
+
+def test_assigned_param_counts_sane():
+    from repro.configs import get_config
+
+    for arch, lo, hi in [("yi_6b", 5e9, 7.5e9), ("qwen1_5_0_5b", 0.3e9, 0.8e9),
+                         ("glm4_9b", 8e9, 11e9), ("gemma3_12b", 10e9, 14e9),
+                         ("chameleon_34b", 30e9, 38e9),
+                         ("recurrentgemma_2b", 2e9, 3.5e9),
+                         ("rwkv6_3b", 2.5e9, 4e9)]:
+        n = get_config(arch).n_params
+        assert lo < n < hi, (arch, n)

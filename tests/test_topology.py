@@ -1,0 +1,95 @@
+"""Unit + property tests for the 2-D mesh topology and multi-address encoding."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    Coord,
+    Mesh2D,
+    MultiAddress,
+    Submesh,
+    encodable,
+    geomean,
+    max_join_fanin,
+    multicast_fork_tree,
+    reduction_join_tree,
+)
+
+
+def test_xy_route_is_dimension_ordered():
+    mesh = Mesh2D(4, 4)
+    path = mesh.xy_route(Coord(0, 0), Coord(3, 2))
+    assert path[0] == Coord(0, 0) and path[-1] == Coord(3, 2)
+    # X varies first, then Y
+    xs = [c.x for c in path]
+    ys = [c.y for c in path]
+    assert xs == sorted(xs)
+    assert ys[: xs.index(3) + 1] == [0] * (xs.index(3) + 1)
+    assert len(path) == mesh.hops(Coord(0, 0), Coord(3, 2)) + 1
+
+
+def test_multi_address_expands_to_pow2_destinations():
+    mesh = Mesh2D(4, 4)
+    ma = MultiAddress(Coord(0, 0), x_mask=0b11, y_mask=0b01)
+    dests = ma.destinations(mesh)
+    assert len(dests) == 8 == ma.num_destinations
+    assert all(ma.matches(d) for d in dests)
+    assert not ma.matches(Coord(0, 2))
+
+
+def test_submesh_alignment_constraints():
+    Submesh(0, 0, 4, 2)  # ok
+    Submesh(4, 2, 4, 2)  # aligned origin ok
+    with pytest.raises(ValueError):
+        Submesh(1, 0, 4, 2)  # origin not aligned to width
+    with pytest.raises(ValueError):
+        Submesh(0, 0, 3, 2)  # non-pow2 width
+
+
+def test_submesh_multi_address_round_trip():
+    mesh = Mesh2D(8, 8)
+    sm = Submesh(4, 0, 4, 4)
+    ma = sm.multi_address()
+    assert sorted(map(tuple, ma.destinations(mesh))) == sorted(map(tuple, sm.coords()))
+
+
+@given(
+    x=st.integers(0, 3), y=st.integers(0, 3),
+    wlog=st.integers(0, 2), hlog=st.integers(0, 2),
+)
+@settings(max_examples=50, deadline=None)
+def test_property_aligned_submeshes_are_encodable(x, y, wlog, hlog):
+    w, h = 1 << wlog, 1 << hlog
+    sm = Submesh(x * w, y * h, w, h)
+    assert encodable(sm.coords())
+    mesh = Mesh2D(16, 16)
+    assert len(sm.multi_address().destinations(mesh)) == w * h
+
+
+def test_non_pow2_sets_not_encodable():
+    assert not encodable([Coord(0, 0), Coord(1, 0), Coord(2, 0)])
+    assert encodable([Coord(0, 0), Coord(1, 0)])
+    assert encodable([Coord(2, 2), Coord(3, 2), Coord(2, 3), Coord(3, 3)])
+    assert not encodable([Coord(0, 0), Coord(3, 0)])  # XOR mask has 2 bits -> {0,1,2,3}
+
+
+def test_multicast_fork_tree_covers_all_destinations():
+    mesh = Mesh2D(4, 4)
+    ma = Submesh(0, 0, 4, 4).multi_address()
+    fork = multicast_fork_tree(mesh, Coord(0, 0), ma)
+    delivered = {a for a, outs in fork.items() if a in outs}
+    assert delivered == set(ma.destinations(mesh))
+
+
+def test_reduction_join_fanin_matches_paper_observation():
+    # Reducing a full 4x4 grid into the corner: the first-column routers
+    # see three inputs (east, north, local) -> max fan-in 3 (Section 4.2.3).
+    mesh = Mesh2D(4, 4)
+    srcs = [Coord(x, y) for x in range(4) for y in range(4)]
+    join = reduction_join_tree(mesh, srcs, Coord(0, 0))
+    assert max_join_fanin(join) == 3
+
+
+def test_geomean():
+    assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+    assert geomean([]) == 0.0

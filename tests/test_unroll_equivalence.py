@@ -1,0 +1,29 @@
+"""scan_layers=False (dry-run lowering mode) must match the scanned path."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_family
+
+ARCHS = ["qwen1_5_0_5b", "gemma3_12b", "rwkv6_3b", "whisper_base", "phi3_5_moe"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_unrolled_matches_scanned(arch):
+    cfg = get_smoke_config(arch)
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "whisper":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.encoder_len, cfg.d_model)) * 0.1
+
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    l_scan = jax.jit(lambda p: fam.loss_fn(p, batch, cfg))(params)
+    l_unroll = jax.jit(lambda p: fam.loss_fn(p, batch, cfg_u))(params)
+    np.testing.assert_allclose(float(l_scan), float(l_unroll), rtol=1e-5)
