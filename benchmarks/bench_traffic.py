@@ -1,0 +1,67 @@
+"""Traffic engine: saturation sweeps, collective storms, engine speedup.
+
+Reports the classic NoC evaluation the paper omits (its microbenchmarks
+run on an idle network): injection-rate vs. latency/throughput curves
+for synthetic patterns, contended SUMMA/FCL storm replays on large
+meshes, and the event-driven-vs-per-cycle engine wall-clock ratio that
+makes the 16x16+ scenarios feasible.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.noc.traffic import (
+    SyntheticConfig,
+    collective_storm,
+    measure,
+    replay,
+    saturation_rate,
+    saturation_sweep,
+    summa_storm,
+)
+from repro.core.topology import Mesh2D
+
+RATES = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2)
+
+
+def rows():
+    p = PAPER_MICRO
+    out = []
+    # Saturation curves, 8x8 mesh (CSV: derived = latency @ throughput)
+    mesh = Mesh2D(8, 8)
+    for pattern in ("uniform", "hotspot"):
+        pts = saturation_sweep(mesh, pattern, RATES, nbytes=256,
+                               packets_per_node=4, seed=0, params=p)
+        for pt in pts:
+            out.append((f"sweep8x8_{pattern}_r{pt.rate:g}", pt.mean_latency / 1e3,
+                        f"lat={pt.mean_latency:.1f}cyc@tput={pt.throughput:.4f}"))
+        # knee=2: rate at which mean latency doubles; inf = never saturated
+        out.append((f"sweep8x8_{pattern}_saturation", 0.0,
+                    f"rate={saturation_rate(pts, knee=2.0):g}"))
+    # Contended collective storms on a 16x16 mesh
+    mesh16 = Mesh2D(16, 16)
+    for name, trace in (
+        ("summa_storm16", summa_storm(mesh16, tile_bytes=2048, iters=4)),
+        ("mixed_storm16", collective_storm(mesh16, tile_bytes=2048, phases=4)),
+    ):
+        t0 = time.perf_counter()
+        res = replay(trace, params=p)
+        wall = time.perf_counter() - t0
+        out.append((name, res.makespan / 1e3,
+                    f"streams={len(res.streams)};wall={wall:.2f}s"))
+    # Event-driven vs per-cycle engine wall clock (identical results)
+    cfg = SyntheticConfig(pattern="uniform", rate=0.02, nbytes=256,
+                          packets_per_node=2, seed=0)
+    t0 = time.perf_counter()
+    pt_e = measure(mesh, cfg, params=p, engine="event")
+    t_event = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pt_c = measure(mesh, cfg, params=p, engine="cycle")
+    t_cycle = time.perf_counter() - t0
+    assert pt_e.makespan == pt_c.makespan, (pt_e.makespan, pt_c.makespan)
+    out.append(("engine_speedup_8x8", t_event * 1e6,
+                f"event={t_event:.2f}s;cycle={t_cycle:.2f}s;"
+                f"x{t_cycle / max(t_event, 1e-9):.1f}"))
+    return out

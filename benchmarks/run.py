@@ -17,6 +17,7 @@ MODULES = [
     ("Fig9a_summa", "benchmarks.bench_summa"),
     ("Fig9b_fcl", "benchmarks.bench_fcl"),
     ("Tab1_Fig10_energy", "benchmarks.bench_energy"),
+    ("Traffic", "benchmarks.bench_traffic"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

@@ -3,6 +3,18 @@
 ``params``    — hardware/runtime parameter sets (+ TPU-pod mapping)
 ``model``     — the paper's analytical runtime models, Eqs (1)-(6), (10)-(15)
 ``netsim``    — flit-level 2-D-mesh simulator (multicast fork / reduction join)
+``engine``    — event-driven run loop: idle-gap fast-forward, bit-identical
+                to the per-cycle loop; makes 16x16+ meshes tractable
+``traffic``   — traffic engine subsystem:
+                ``traffic.patterns``  seedable synthetic workloads (uniform,
+                                      transpose, bit-complement, bit-reversal,
+                                      hotspot, neighbor, all-to-all) and
+                                      SUMMA/FCL collective storms
+                ``traffic.trace``     TrafficEvent/Trace serialization, live
+                                      TraceRecorder capture, and contended
+                                      phase-by-phase replay
+                ``traffic.sweep``     injection-rate vs. latency/throughput
+                                      saturation curves
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper
 """

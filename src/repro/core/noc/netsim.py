@@ -24,9 +24,10 @@ The simulator is used to validate the analytical models of ``model.py``
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import math
 from typing import Optional, Sequence
 
+from repro.core.noc.engine import run_event_driven
 from repro.core.noc.params import NoCParams
 from repro.core.topology import Coord, Mesh2D, MultiAddress, multicast_fork_tree, reduction_join_tree
 
@@ -53,6 +54,13 @@ class _StreamState:
     finals: list[Edge]
     arrivals: dict[Edge, list[int]] = dataclasses.field(default_factory=dict)
     done_cycle: Optional[int] = None
+    # Earliest cycle this stream could possibly advance, given its current
+    # arrivals.  Readiness depends only on *intra-stream* state (prereq
+    # arrivals, inject schedule, rate spacing) — other streams interact
+    # solely by blocking links within a cycle — so the hint stays valid
+    # until this stream itself advances.  None = unknown/dirty;
+    # ``math.inf`` = blocked until an own advance (or forever).
+    ready_hint: Optional[float] = None
 
     def edges(self) -> list[Edge]:
         out = set(self.prereqs)
@@ -99,12 +107,68 @@ class _StreamState:
         return reqs
 
     def advance(self, group: list[Edge], t: int) -> None:
+        self.ready_hint = None
         for e in group:
             self.arrivals.setdefault(e, []).append(t)
         if self.done_cycle is None and all(
             self._crossed(e) >= self.n_beats for e in self.finals
         ):
             self.done_cycle = t
+
+    def _ready_after(self, e: Edge, b: int) -> Optional[int]:
+        """Earliest integer cycle at which ``_beat_ready(e, b, .)`` holds.
+
+        ``None`` means "not until some other edge advances first" (beat
+        exhausted, or an upstream arrival for beat ``b`` is still missing)
+        — such edges contribute no event to the idle fast-forward.
+        """
+        if b >= self.n_beats:
+            return None
+        thr = 0
+        for up in self.prereqs.get(e, ()):
+            arr = self.arrivals.get(up, ())
+            if len(arr) <= b:
+                return None
+            thr = max(thr, arr[b] + 1)
+        if e in self.inject:
+            start, rate = self.inject[e]
+            thr = max(thr, math.ceil(start + b * rate))
+        arr = self.arrivals.get(e, ())
+        if arr:
+            thr = max(thr, math.ceil(arr[-1] + self.rate.get(e, 1.0)))
+        return thr
+
+    def next_ready_cycle(self) -> Optional[int]:
+        """Earliest cycle at which any request can fire, given current
+        arrivals (callers invoke it on idle cycles, where it necessarily
+        exceeds the current cycle).
+
+        Exact mirror of ``requests``: fork groups need all member edges on
+        the same beat and every member ready; loose prereq edges need only
+        themselves.  Used by the event-driven engine to skip idle gaps.
+        """
+        best: Optional[int] = None
+        seen = set()
+        for g in self.groups:
+            b = self._crossed(g[0])
+            if all(self._crossed(e) == b for e in g):
+                thr = 0
+                for e in g:
+                    r = self._ready_after(e, b)
+                    if r is None:
+                        thr = None
+                        break
+                    thr = max(thr, r)
+                if thr is not None and (best is None or thr < best):
+                    best = thr
+            seen.update(g)
+        for e in self.prereqs:
+            if e in seen:
+                continue
+            r = self._ready_after(e, self._crossed(e))
+            if r is not None and (best is None or r < best):
+                best = r
+        return best
 
 
 def _chain(edges: list[Edge]) -> tuple[dict[Edge, list[Edge]], list[list[Edge]]]:
@@ -122,11 +186,29 @@ class NoCSim:
         self.p = params or NoCParams()
         self.streams: list[_StreamState] = []
         self._atomic_busy_until = 0  # shared RMW unit for the SW barrier
-        self._rr = itertools.count()
+        self._rr = 0  # round-robin arbitration counter, one slot per cycle
+        self.recorders: list = []  # traffic.trace.TraceRecorder et al.
+
+    # -- arbitration counter -------------------------------------------------
+
+    def _rr_next(self) -> int:
+        v = self._rr
+        self._rr += 1
+        return v
+
+    def _rr_skip(self, n: int) -> None:
+        self._rr += n
+
+    # -- trace hooks ---------------------------------------------------------
+
+    def _record(self, kind: str, **kw) -> None:
+        for r in self.recorders:
+            r.record(kind, **kw)
 
     # -- stream builders ---------------------------------------------------
 
     def add_unicast(self, src: Coord, dst: Coord, nbytes: int, start: float = 0.0):
+        self._record("unicast", src=src, dst=dst, nbytes=nbytes, start=start)
         n = self.p.beats(nbytes)
         path = self.mesh.xy_route(src, dst)
         edges: list[Edge] = [(src, src)] + list(zip(path, path[1:])) + [(dst, dst)]
@@ -144,6 +226,7 @@ class NoCSim:
         return st
 
     def add_multicast(self, src: Coord, maddr: MultiAddress, nbytes: int, start: float = 0.0):
+        self._record("multicast", src=src, maddr=maddr, nbytes=nbytes, start=start)
         n = self.p.beats(nbytes)
         fork = multicast_fork_tree(self.mesh, src, maddr)
         # fork maps router -> set(next hops); local delivery encoded as self.
@@ -193,6 +276,9 @@ class NoCSim:
         start: float = 0.0,
         inject_alpha: float | None = None,
     ):
+        self._record(
+            "reduction", sources=tuple(sources), dst=dst, nbytes=nbytes, start=start
+        )
         n = self.p.beats(nbytes)
         alpha = self.p.alpha(1) if inject_alpha is None else inject_alpha
         join = reduction_join_tree(self.mesh, list(sources), dst)
@@ -256,8 +342,17 @@ class NoCSim:
 
     # -- engine -------------------------------------------------------------
 
-    def run(self, max_cycles: int = 2_000_000) -> int:
-        """Advance until all streams complete; returns the last done cycle."""
+    def run(self, max_cycles: int = 2_000_000, engine: str = "event") -> int:
+        """Advance until all streams complete; returns the last done cycle.
+
+        ``engine='event'`` (default) fast-forwards idle gaps and is
+        bit-identical to ``engine='cycle'``, the legacy
+        one-iteration-per-cycle loop kept for equivalence testing.
+        """
+        if engine == "event":
+            return run_event_driven(self, max_cycles)
+        if engine != "cycle":
+            raise ValueError(f"unknown engine {engine!r}")
         t = 0
         while t < max_cycles:
             pending = [s for s in self.streams if s.done_cycle is None]
@@ -265,7 +360,7 @@ class NoCSim:
                 break
             busy: set[Edge] = set()
             progressed = False
-            start = next(self._rr) % max(1, len(pending))
+            start = self._rr_next() % len(pending)
             for s in pending[start:] + pending[:start]:
                 for group in s.requests(t):
                     links = [e for e in group if e[0] != e[1]]
@@ -274,10 +369,18 @@ class NoCSim:
                     busy.update(links)
                     s.advance(group, t)
                     progressed = True
+            if not progressed and all(
+                s.next_ready_cycle() is None for s in pending
+            ):
+                raise RuntimeError(
+                    f"netsim deadlock at cycle {t}: no pending stream can ever advance"
+                )
             t += 1
         unfinished = [s for s in self.streams if s.done_cycle is None]
         if unfinished:
             raise RuntimeError(f"netsim deadlock/timeout at cycle {t}")
+        if not self.streams:
+            return 0
         return max(s.done_cycle for s in self.streams)
 
     # -- barriers ------------------------------------------------------------
@@ -286,6 +389,7 @@ class NoCSim:
         """Atomic-counter barrier: serialized 3-cycle RMW at the counter tile,
         then a multicast interrupt (the paper's SW baseline uses the HW
         multicast for notification)."""
+        self._record("barrier_sw", participants=tuple(participants), counter=counter)
         self.streams.clear()
         arrive = 0
         last_done = 0
@@ -302,10 +406,19 @@ class NoCSim:
 
     def barrier_hw(self, participants: Sequence[Coord], counter: Coord) -> int:
         """LsbAnd in-network reduction + multicast completion notification."""
+        self._record("barrier_hw", participants=tuple(participants), counter=counter)
         self.streams.clear()
         # Barrier contributions are single LSU stores, not DMA bursts: no
-        # DMA-descriptor round-trip, just the request path latency.
-        self.add_reduction(list(participants), counter, nbytes=8, start=0.0, inject_alpha=2.0)
+        # DMA-descriptor round-trip, just the request path latency.  The
+        # internal reduction is the barrier's own mechanism, not workload
+        # traffic, so it is not re-recorded as a separate trace event.
+        recorders, self.recorders = self.recorders, []
+        try:
+            self.add_reduction(
+                list(participants), counter, nbytes=8, start=0.0, inject_alpha=2.0
+            )
+        finally:
+            self.recorders = recorders
         t_red = self.run()
         diam = max(self.mesh.hops(counter, c) for c in participants)
         return int(t_red + self.p.hop_cycles * diam + 1)

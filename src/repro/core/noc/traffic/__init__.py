@@ -1,0 +1,36 @@
+"""Traffic engine: synthetic workloads, trace capture/replay, sweeps.
+
+``patterns`` — seedable synthetic generators (uniform, transpose,
+              bit-complement, bit-reversal, hotspot, neighbor,
+              all-to-all) and SUMMA/FCL collective storms
+``trace``    — TrafficEvent/Trace serialization, live-sim TraceRecorder,
+              and contended phase-by-phase replay
+``sweep``    — injection-rate vs. latency/throughput saturation curves
+
+The event-driven engine that makes large-mesh sweeps feasible lives one
+level up in ``noc/engine.py``.
+"""
+
+from repro.core.noc.traffic.patterns import (  # noqa: F401
+    PATTERNS,
+    SyntheticConfig,
+    collective_storm,
+    fcl_storm,
+    summa_storm,
+    synthetic_trace,
+)
+from repro.core.noc.traffic.sweep import (  # noqa: F401
+    CSV_HEADER,
+    SweepPoint,
+    measure,
+    saturation_rate,
+    saturation_sweep,
+)
+from repro.core.noc.traffic.trace import (  # noqa: F401
+    ReplayResult,
+    StreamResult,
+    Trace,
+    TraceRecorder,
+    TrafficEvent,
+    replay,
+)

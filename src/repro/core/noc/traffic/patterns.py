@@ -1,0 +1,266 @@
+"""Deterministic, seedable synthetic workload generators.
+
+Classic NoC evaluation patterns (uniform-random, transpose,
+bit-complement, bit-reversal, hotspot, neighbor, all-to-all) plus
+*collective storms* that replay the paper's SUMMA / FCL phase structure —
+concurrent row-multicasts, column-reductions and barriers — as stream
+batches at a configurable injection rate.
+
+All generators return a :class:`~repro.core.noc.traffic.trace.Trace`;
+nothing touches a simulator here, so workloads can be generated,
+serialized and replayed independently.
+
+Injection model: each node draws ``packets_per_node`` unit-rate
+exponential inter-arrival gaps from a seeded PRNG, and the gaps are
+scaled by ``1 / rate`` (packets per node per cycle).  Because the unit
+gaps and destinations are drawn *once* per seed, sweeping the injection
+rate rescales the same packet population in time — which keeps
+saturation curves comparable point-to-point and monotone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Optional
+
+from repro.core.topology import (
+    Coord,
+    Mesh2D,
+    Submesh,
+    bit_complement_coord,
+    bit_reversal_coord,
+    neighbor_coord,
+    transpose_coord,
+)
+from repro.core.noc.traffic.trace import Trace, TrafficEvent
+
+PATTERNS = (
+    "uniform",
+    "transpose",
+    "bit_complement",
+    "bit_reversal",
+    "hotspot",
+    "neighbor",
+    "all_to_all",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticConfig:
+    """A synthetic workload: pattern + injection process."""
+
+    pattern: str = "uniform"
+    rate: float = 0.01             # packets / node / cycle (offered load)
+    nbytes: int = 256              # payload per packet (4 beats)
+    packets_per_node: int = 4
+    seed: int = 0
+    hotspot: tuple[int, int] = (0, 0)
+    hotspot_frac: float = 0.5      # fraction of packets aimed at the hotspot
+
+    def __post_init__(self):
+        if self.pattern not in PATTERNS:
+            raise ValueError(f"unknown pattern {self.pattern!r}; one of {PATTERNS}")
+        if self.rate <= 0:
+            raise ValueError(f"injection rate must be > 0, got {self.rate}")
+
+
+def _destination(
+    mesh: Mesh2D, cfg: SyntheticConfig, src: Coord, rng: random.Random
+) -> Optional[Coord]:
+    """Deterministic or drawn destination for one packet; None = no packet.
+
+    The PRNG is consumed identically regardless of the outcome so that
+    fixed-point sources do not shift the stream of draws of later nodes.
+    """
+    if cfg.pattern == "uniform":
+        dst = mesh.coord_of(rng.randrange(mesh.num_tiles))
+    elif cfg.pattern == "hotspot":
+        u, nid = rng.random(), rng.randrange(mesh.num_tiles)
+        dst = Coord(*cfg.hotspot) if u < cfg.hotspot_frac else mesh.coord_of(nid)
+    elif cfg.pattern == "transpose":
+        dst = transpose_coord(mesh, src)
+    elif cfg.pattern == "bit_complement":
+        dst = bit_complement_coord(mesh, src)
+    elif cfg.pattern == "bit_reversal":
+        dst = bit_reversal_coord(mesh, src)
+    elif cfg.pattern == "neighbor":
+        dst = neighbor_coord(mesh, src)
+    else:  # pragma: no cover - all_to_all handled by synthetic_trace
+        raise ValueError(cfg.pattern)
+    return None if dst == src else dst
+
+
+def synthetic_trace(mesh: Mesh2D, cfg: SyntheticConfig) -> Trace:
+    """Generate one single-phase synthetic workload trace."""
+    rng = random.Random(cfg.seed)
+    trace = Trace(mesh.cols, mesh.rows)
+    if cfg.pattern == "all_to_all":
+        return _all_to_all_trace(mesh, cfg, rng, trace)
+    for src in mesh.coords():
+        t = 0.0
+        for _ in range(cfg.packets_per_node):
+            t += rng.expovariate(1.0) / cfg.rate
+            dst = _destination(mesh, cfg, src, rng)
+            if dst is None:
+                continue
+            trace.events.append(
+                TrafficEvent(
+                    "unicast", start=t, nbytes=cfg.nbytes,
+                    src=tuple(src), dst=tuple(dst),
+                )
+            )
+    return trace
+
+
+def _all_to_all_trace(
+    mesh: Mesh2D, cfg: SyntheticConfig, rng: random.Random, trace: Trace
+) -> Trace:
+    """Every node sends one packet to every other node, rate-staggered."""
+    for src in mesh.coords():
+        t = 0.0
+        for dst in mesh.coords():
+            if dst == src:
+                continue
+            t += rng.expovariate(1.0) / cfg.rate
+            trace.events.append(
+                TrafficEvent(
+                    "unicast", start=t, nbytes=cfg.nbytes,
+                    src=tuple(src), dst=tuple(dst),
+                )
+            )
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Collective storms: the paper's SUMMA / FCL phase structure as traffic.
+# Mesh extents must be powers of two — the (dst, mask) submesh-encoding
+# constraint (Section 3.2.2) that the row/column multicasts rely on.
+# ---------------------------------------------------------------------------
+
+
+def _check_storm_mesh(mesh: Mesh2D) -> None:
+    from repro.core.topology import is_pow2
+
+    if not (is_pow2(mesh.cols) and is_pow2(mesh.rows)):
+        raise ValueError(
+            f"collective storms need power-of-two mesh extents for (dst, mask)"
+            f" row/column addressing, got {mesh.cols}x{mesh.rows}"
+        )
+
+
+def _stagger(trace: Trace, interval: float) -> Trace:
+    """Offset each phase's non-barrier events by ``interval`` in order."""
+    if interval == 0.0:
+        return trace
+    counts: dict[int, int] = {}
+    out = Trace(trace.cols, trace.rows)
+    for ev in trace.events:
+        if ev.kind != "barrier":
+            i = counts.get(ev.phase, 0)
+            counts[ev.phase] = i + 1
+            ev = dataclasses.replace(ev, start=ev.start + i * interval)
+        out.events.append(ev)
+    return out
+
+
+def _row_multicast_events(mesh, k, tile_bytes, phase, t0, interval):
+    """SUMMA iteration ``k``: the column-``k`` tile of every row multicasts
+    its A block along the row.  Returns (events, next start offset)."""
+    out, t = [], t0
+    for y in range(mesh.rows):
+        ma = Submesh(0, y, mesh.cols, 1).multi_address()
+        out.append(TrafficEvent(
+            "multicast", phase=phase, start=t, nbytes=tile_bytes,
+            src=(k % mesh.cols, y), dst=tuple(ma.dst),
+            x_mask=ma.x_mask, y_mask=ma.y_mask))
+        t += interval
+    return out, t
+
+
+def _col_reduction_events(mesh, tile_bytes, phase, t0, interval):
+    """FCL: every column reduces its partial C tiles into its row-0 tile."""
+    out, t = [], t0
+    for x in range(mesh.cols):
+        out.append(TrafficEvent(
+            "reduction", phase=phase, start=t, nbytes=tile_bytes,
+            dst=(x, 0), sources=tuple((x, y) for y in range(mesh.rows))))
+        t += interval
+    return out, t
+
+
+def _barrier_event(mesh, phase) -> TrafficEvent:
+    return TrafficEvent("barrier", phase=phase, dst=(0, 0),
+                        sources=tuple(tuple(c) for c in mesh.coords()))
+
+
+def summa_storm(
+    mesh: Mesh2D,
+    tile_bytes: int = 2048,
+    iters: int | None = None,
+    interval: float = 0.0,
+) -> Trace:
+    """SUMMA iteration traffic: concurrent row A- and column B-multicasts.
+
+    Iteration ``k`` (one phase): the tile in column ``k`` of every row
+    multicasts its A block along the row, and the tile in row ``k`` of
+    every column multicasts its B block along the column, all sharing the
+    fabric; a hardware barrier closes the phase.  ``interval`` staggers
+    stream starts within a phase (0 = the full concurrent storm).
+
+    The events are exactly the native-schedule cost path of
+    ``summa.summa_noc_trace`` (one generator, no drift); this wrapper
+    adds the mesh validation and the injection stagger.
+    """
+    _check_storm_mesh(mesh)
+    from repro.core.summa import summa_noc_trace
+
+    return _stagger(
+        summa_noc_trace(mesh, tile_bytes, schedule="native", iters=iters),
+        interval,
+    )
+
+
+def fcl_storm(
+    mesh: Mesh2D,
+    tile_bytes: int = 2048,
+    phases: int = 1,
+    interval: float = 0.0,
+) -> Trace:
+    """FCL partial-C reduction traffic: concurrent per-column reductions.
+
+    Each phase reduces every column's partial C tiles into the row-0 tile
+    of the column (one wide in-network reduction per column, all columns
+    concurrently), then barriers.
+    """
+    _check_storm_mesh(mesh)
+    trace = Trace(mesh.cols, mesh.rows)
+    for ph in range(phases):
+        evs, _ = _col_reduction_events(mesh, tile_bytes, ph, 0.0, interval)
+        trace.events.extend(evs)
+        trace.events.append(_barrier_event(mesh, ph))
+    return trace
+
+
+def collective_storm(
+    mesh: Mesh2D,
+    tile_bytes: int = 2048,
+    phases: int | None = None,
+    interval: float = 0.0,
+) -> Trace:
+    """Combined storm: SUMMA row-multicasts + FCL column-reductions.
+
+    Phase ``k`` injects the row A-multicasts of SUMMA iteration ``k``
+    *and* a per-column partial-C reduction, then barriers — the heaviest
+    mixed collective load the paper's workloads generate concurrently.
+    """
+    _check_storm_mesh(mesh)
+    phases = mesh.cols if phases is None else phases
+    trace = Trace(mesh.cols, mesh.rows)
+    for k in range(phases):
+        evs, t = _row_multicast_events(mesh, k, tile_bytes, k, 0.0, interval)
+        trace.events.extend(evs)
+        evs, _ = _col_reduction_events(mesh, tile_bytes, k, t, interval)
+        trace.events.extend(evs)
+        trace.events.append(_barrier_event(mesh, k))
+    return trace

@@ -1,0 +1,257 @@
+"""Traffic traces: capture, serialization, and contended replay.
+
+A :class:`Trace` is a mesh-shape-stamped list of :class:`TrafficEvent`
+records — unicasts, multicasts, reductions and barriers — organized into
+*phases*.  Events within a phase share the fabric concurrently (their
+``start`` offsets are relative to the phase start); a barrier event closes
+the phase, and the next phase begins only after every stream of the
+current one has drained plus the hardware-barrier round-trip.
+
+Traces come from three places:
+
+* a :class:`TraceRecorder` attached to a live ``NoCSim`` — every
+  ``add_unicast`` / ``add_multicast`` / ``add_reduction`` / ``barrier_*``
+  call is captured as it is issued (the cost paths of ``schedules.py``,
+  ``summa.py`` and ``overlap.py`` emit through this hook),
+* the synthetic generators in :mod:`repro.core.noc.traffic.patterns`,
+* a JSON file produced by :meth:`Trace.to_json` (round-trip tested).
+
+Replaying a trace through :func:`replay` runs all phase-concurrent
+streams over the *shared* link fabric, so the resulting completion cycles
+include interference — unlike summing per-collective idle-network model
+times, which is what the paper's microbenchmarks (and the analytical
+models in ``noc/model.py``) report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import NoCParams
+from repro.core.topology import Coord, Mesh2D, MultiAddress
+
+KINDS = ("unicast", "multicast", "reduction", "barrier")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficEvent:
+    """One fabric-level operation, serializable as a flat dict."""
+
+    kind: str                       # one of KINDS
+    phase: int = 0                  # barrier-separated epoch index
+    start: float = 0.0              # injection cycle, relative to phase start
+    nbytes: int = 0
+    src: Optional[tuple[int, int]] = None       # unicast / multicast source
+    dst: Optional[tuple[int, int]] = None       # unicast dst, reduction root,
+                                                # multicast (dst, mask) base
+    x_mask: int = 0                 # multicast masks
+    y_mask: int = 0
+    sources: tuple[tuple[int, int], ...] = ()   # reduction inputs / barrier
+                                                # participants (dst = counter)
+    flavor: str = ""                # barriers: "sw" | "hw" (default hw)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["sources"] = [list(s) for s in self.sources]
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "TrafficEvent":
+        if d.get("kind") not in KINDS:
+            raise ValueError(f"unknown traffic event kind {d.get('kind')!r}")
+        return TrafficEvent(
+            kind=d["kind"],
+            phase=int(d.get("phase", 0)),
+            start=float(d.get("start", 0.0)),
+            nbytes=int(d.get("nbytes", 0)),
+            src=tuple(d["src"]) if d.get("src") is not None else None,
+            dst=tuple(d["dst"]) if d.get("dst") is not None else None,
+            x_mask=int(d.get("x_mask", 0)),
+            y_mask=int(d.get("y_mask", 0)),
+            sources=tuple(tuple(s) for s in d.get("sources", ())),
+            flavor=str(d.get("flavor", "")),
+        )
+
+
+@dataclasses.dataclass
+class Trace:
+    cols: int
+    rows: int
+    events: list[TrafficEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def mesh(self) -> Mesh2D:
+        return Mesh2D(self.cols, self.rows)
+
+    @property
+    def num_phases(self) -> int:
+        return max((e.phase for e in self.events), default=-1) + 1
+
+    def phase_events(self, phase: int) -> list[TrafficEvent]:
+        return [e for e in self.events if e.phase == phase]
+
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.events if e.kind != "barrier")
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(
+            {
+                "version": 1,
+                "cols": self.cols,
+                "rows": self.rows,
+                "events": [e.to_dict() for e in self.events],
+            },
+            indent=indent,
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "Trace":
+        d = json.loads(s)
+        if d.get("version") != 1:
+            raise ValueError(f"unsupported trace version {d.get('version')!r}")
+        return Trace(
+            cols=int(d["cols"]),
+            rows=int(d["rows"]),
+            events=[TrafficEvent.from_dict(e) for e in d["events"]],
+        )
+
+
+class TraceRecorder:
+    """Captures stream-builder calls of a live ``NoCSim`` into a Trace.
+
+    Attach with ``rec = TraceRecorder.attach(sim)``; every subsequent
+    ``add_*`` call is appended to ``rec.trace``.  A ``barrier_sw`` /
+    ``barrier_hw`` call records a barrier event and closes the current
+    phase (mirroring the phase semantics of :func:`replay`).
+    """
+
+    def __init__(self, mesh: Mesh2D):
+        self.trace = Trace(mesh.cols, mesh.rows)
+        self.phase = 0
+
+    @classmethod
+    def attach(cls, sim: NoCSim) -> "TraceRecorder":
+        rec = cls(sim.mesh)
+        sim.recorders.append(rec)
+        return rec
+
+    def record(self, kind: str, **kw) -> None:
+        if kind == "unicast":
+            ev = TrafficEvent(
+                "unicast", phase=self.phase, start=kw["start"],
+                nbytes=kw["nbytes"], src=tuple(kw["src"]), dst=tuple(kw["dst"]),
+            )
+        elif kind == "multicast":
+            ma: MultiAddress = kw["maddr"]
+            ev = TrafficEvent(
+                "multicast", phase=self.phase, start=kw["start"],
+                nbytes=kw["nbytes"], src=tuple(kw["src"]), dst=tuple(ma.dst),
+                x_mask=ma.x_mask, y_mask=ma.y_mask,
+            )
+        elif kind == "reduction":
+            ev = TrafficEvent(
+                "reduction", phase=self.phase, start=kw["start"],
+                nbytes=kw["nbytes"], dst=tuple(kw["dst"]),
+                sources=tuple(tuple(s) for s in kw["sources"]),
+            )
+        elif kind in ("barrier_sw", "barrier_hw"):
+            ev = TrafficEvent(
+                "barrier", phase=self.phase, dst=tuple(kw["counter"]),
+                sources=tuple(tuple(s) for s in kw["participants"]),
+                flavor=kind.removeprefix("barrier_"),
+            )
+            self.phase += 1
+        else:
+            raise ValueError(f"unknown record kind {kind!r}")
+        self.trace.events.append(ev)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    event: TrafficEvent
+    inject_cycle: float    # absolute injection request cycle
+    done_cycle: int        # absolute completion cycle
+
+    @property
+    def latency(self) -> float:
+        return self.done_cycle - self.inject_cycle
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    makespan: int                       # last completion cycle overall
+    streams: list[StreamResult]
+    phase_end: list[float]              # fabric-drain + barrier end per phase
+
+    @property
+    def latencies(self) -> list[float]:
+        return [s.latency for s in self.streams]
+
+    def mean_latency(self) -> float:
+        lats = self.latencies
+        return sum(lats) / len(lats) if lats else 0.0
+
+    def max_latency(self) -> float:
+        return max(self.latencies, default=0.0)
+
+
+def replay(
+    trace: Trace,
+    params: NoCParams | None = None,
+    max_cycles: int = 50_000_000,
+    engine: str = "event",
+) -> ReplayResult:
+    """Run a trace through the simulator under shared-fabric contention.
+
+    Phase k+1 starts only after phase k's streams have drained (plus the
+    HW-barrier cost when the phase ends with a barrier event), so the
+    result composes end-to-end workload time *with* interference.
+    """
+    p = params or NoCParams()
+    sim = NoCSim(trace.mesh, p)
+    results: list[StreamResult] = []
+    phase_end: list[float] = []
+    offset = 0.0
+    by_phase: dict[int, list[TrafficEvent]] = {}
+    for ev in trace.events:
+        by_phase.setdefault(ev.phase, []).append(ev)
+    for phase in range(trace.num_phases):
+        added: list[tuple[TrafficEvent, object, float]] = []
+        barrier_cost = 0.0
+        for ev in by_phase.get(phase, ()):
+            start = offset + ev.start
+            if ev.kind == "unicast":
+                st = sim.add_unicast(
+                    Coord(*ev.src), Coord(*ev.dst), ev.nbytes, start=start
+                )
+            elif ev.kind == "multicast":
+                ma = MultiAddress(Coord(*ev.dst), ev.x_mask, ev.y_mask)
+                st = sim.add_multicast(Coord(*ev.src), ma, ev.nbytes, start=start)
+            elif ev.kind == "reduction":
+                st = sim.add_reduction(
+                    [Coord(*s) for s in ev.sources], Coord(*ev.dst),
+                    ev.nbytes, start=start,
+                )
+            elif ev.kind == "barrier":
+                # The barrier's own fabric cost is the analytical model of
+                # its recorded flavor (its reduction would wipe sim state if
+                # simulated inline); it serializes the phase boundary.
+                fn = p.barrier_sw if ev.flavor == "sw" else p.barrier_hw
+                barrier_cost = max(barrier_cost, fn(len(ev.sources)))
+                continue
+            else:  # pragma: no cover - kinds validated at parse time
+                raise ValueError(f"unknown event kind {ev.kind!r}")
+            added.append((ev, st, start))
+        done = sim.run(max_cycles=max_cycles, engine=engine)
+        for ev, st, start in added:
+            results.append(StreamResult(ev, start, st.done_cycle))
+        # max(): a phase that adds no streams (barrier-only, or a gap in
+        # phase numbering) must stack on the accumulated offset — ``done``
+        # alone would rewind it to the last stream completion.
+        offset = max(offset, done) + barrier_cost
+        phase_end.append(offset)
+    makespan = max((r.done_cycle for r in results), default=0)
+    return ReplayResult(makespan=makespan, streams=results, phase_end=phase_end)

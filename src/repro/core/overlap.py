@@ -91,6 +91,54 @@ def matmul_rs(x, w_shard, axis: str):
     return carry.astype(x.dtype)  # fully-reduced block ``idx``
 
 
+# ---------------------------------------------------------------------------
+# NoC cost paths: the ring traffic the overlapped matmuls put on the mesh.
+# One phase per ring step (each step's permutes depend on the previous
+# step's), no barrier events — phases advance on fabric drain alone, which
+# is the overlap-friendly behaviour these schedules are designed for.
+# ---------------------------------------------------------------------------
+
+
+def ag_matmul_noc_trace(mesh, members, shard_bytes: int):
+    """Fabric traffic of ``ag_matmul``: a bidirectional neighbour ring.
+
+    ``members`` is the ordered ring of ``Coord`` tiles (e.g. one mesh
+    row).  Step ``s`` ships every tile's forward shard one hop ahead and
+    (while the backward stream is live) its backward shard one hop back,
+    both directions sharing the fabric.
+    """
+    from repro.core.noc.traffic.trace import Trace, TrafficEvent
+
+    n = len(members)
+    trace = Trace(mesh.cols, mesh.rows)
+    steps_f, steps_b = n // 2, (n - 1) // 2
+    for s in range(max(steps_f, steps_b)):
+        for i in range(n):
+            if s < steps_f:
+                trace.events.append(TrafficEvent(
+                    "unicast", phase=s, nbytes=shard_bytes,
+                    src=tuple(members[i]), dst=tuple(members[(i + 1) % n])))
+            if s < steps_b:
+                trace.events.append(TrafficEvent(
+                    "unicast", phase=s, nbytes=shard_bytes,
+                    src=tuple(members[i]), dst=tuple(members[(i - 1) % n])))
+    return trace
+
+
+def matmul_rs_noc_trace(mesh, members, block_bytes: int):
+    """Fabric traffic of ``matmul_rs``: a unidirectional accumulation ring."""
+    from repro.core.noc.traffic.trace import Trace, TrafficEvent
+
+    n = len(members)
+    trace = Trace(mesh.cols, mesh.rows)
+    for s in range(n - 1):
+        for i in range(n):
+            trace.events.append(TrafficEvent(
+                "unicast", phase=s, nbytes=block_bytes,
+                src=tuple(members[i]), dst=tuple(members[(i + 1) % n])))
+    return trace
+
+
 def ag_matmul_sharded(x, w, mesh, axis: str = "model"):
     from jax.sharding import PartitionSpec as P
 

@@ -232,3 +232,119 @@ def barrier(axis: str, schedule: str = "native"):
     if schedule == "native":
         return jax.lax.psum(token, axis)
     return all_reduce(token[None], axis, schedule="tree")[0]
+
+
+# ---------------------------------------------------------------------------
+# NoC cost paths: map each schedule onto the fabric traffic it generates.
+#
+# These emitters mirror the taxonomy above one-to-one but produce
+# ``TrafficEvent`` records (src/dst streams with model-derived start
+# offsets) instead of XLA collectives, so a whole schedule can be
+# replayed through ``noc.traffic.trace.replay`` *under shared-fabric
+# contention* — composing end-to-end workload estimates with
+# interference, which summing the idle-network model times of
+# ``noc/model.py`` cannot do.
+# ---------------------------------------------------------------------------
+
+
+def broadcast_noc_events(members, root: int, nbytes: int, schedule: str = "native",
+                         chunks: int = 1, phase: int = 0, params=None):
+    """Fabric traffic of ``broadcast`` over the mesh tiles ``members``.
+
+    ``members`` is the ordered list of ``Coord`` tiles forming the axis
+    (a mesh row/column for the paper's collectives).  Returns a list of
+    ``TrafficEvent``; stage start offsets follow the per-stage terms of
+    the analytical models (Eqs 1-4).
+    """
+    from repro.core.noc.params import NoCParams
+    from repro.core.noc.traffic.trace import TrafficEvent
+    from repro.core.topology import multi_address_for
+
+    p = params or NoCParams()
+    n = len(members)
+    _check_pow2(n, "broadcast_noc_events")
+    beats = p.beats(nbytes)
+    if schedule == "native":
+        ma = multi_address_for(members)
+        return [TrafficEvent("multicast", phase=phase, nbytes=nbytes,
+                             src=tuple(members[root]), dst=tuple(ma.dst),
+                             x_mask=ma.x_mask, y_mask=ma.y_mask)]
+    out = []
+    if schedule in ("chain", "pipelined"):
+        k = chunks if schedule == "pipelined" else 1
+        chunk_bytes = max(1, nbytes // k)
+        stage = p.alpha(1) + p.beats(chunk_bytes) * p.beta + p.delta
+        for i in range(n - 1):
+            src, dst = members[(root + i) % n], members[(root + i + 1) % n]
+            for j in range(k):
+                out.append(TrafficEvent("unicast", phase=phase, nbytes=chunk_bytes,
+                                        start=(i + j) * stage,
+                                        src=tuple(src), dst=tuple(dst)))
+        return out
+    if schedule == "tree":
+        t = 0.0
+        for s in range(n.bit_length() - 1):
+            dist = 1 << s
+            for i in range(dist):
+                src = members[(root + i) % n]
+                dst = members[(root + i + dist) % n]
+                out.append(TrafficEvent("unicast", phase=phase, nbytes=nbytes,
+                                        start=t, src=tuple(src), dst=tuple(dst)))
+            t += p.alpha(dist) + beats * p.beta + p.delta
+        return out
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def all_reduce_noc_events(members, nbytes: int, schedule: str = "native",
+                          root: int = 0, phase: int = 0, params=None):
+    """Fabric traffic of ``all_reduce`` over the mesh tiles ``members``.
+
+    The native path is the paper's AXI coupling: one wide in-network
+    reduction into ``members[root]`` followed by a multicast of the
+    result (start offset = the reduction model time).
+    """
+    from repro.core.noc import model as m
+    from repro.core.noc.params import NoCParams
+    from repro.core.noc.traffic.trace import TrafficEvent
+    from repro.core.topology import multi_address_for
+
+    p = params or NoCParams()
+    n = len(members)
+    _check_pow2(n, "all_reduce_noc_events")
+    beats = p.beats(nbytes)
+    if schedule == "native":
+        ma = multi_address_for(members)
+        t_red = m.reduction_hw(p, beats, n)
+        return [
+            TrafficEvent("reduction", phase=phase, nbytes=nbytes,
+                         dst=tuple(members[root]),
+                         sources=tuple(tuple(c) for c in members)),
+            TrafficEvent("multicast", phase=phase, start=t_red, nbytes=nbytes,
+                         src=tuple(members[root]), dst=tuple(ma.dst),
+                         x_mask=ma.x_mask, y_mask=ma.y_mask),
+        ]
+    out = []
+    if schedule == "tree":
+        t = 0.0
+        stage = p.alpha(1) + beats * p.beta + max(beats * p.beta_c, 0.0) + p.delta
+        for s in range(n.bit_length() - 1):
+            dist = 1 << s
+            for i in range(n):
+                out.append(TrafficEvent("unicast", phase=phase, nbytes=nbytes,
+                                        start=t, src=tuple(members[i]),
+                                        dst=tuple(members[i ^ dist])))
+            t += stage
+        return out
+    if schedule in ("chain", "pipelined"):
+        # ring reduce-scatter + all-gather; 'chain' moves whole tensors,
+        # 'pipelined' moves 1/n chunks (the software k = n limit).
+        chunk_bytes = max(1, nbytes // n) if schedule == "pipelined" else nbytes
+        stage = p.alpha(1) + p.beats(chunk_bytes) * p.beta + p.delta
+        steps = 2 * (n - 1) if schedule == "pipelined" else n - 1
+        for s in range(steps):
+            for i in range(n):
+                out.append(TrafficEvent("unicast", phase=phase, nbytes=chunk_bytes,
+                                        start=s * stage, src=tuple(members[i]),
+                                        dst=tuple(members[(i + 1) % n])))
+        return out
+    raise ValueError(f"unknown schedule {schedule!r}")

@@ -83,6 +83,41 @@ def _rotate_by(x, axis: str, n: int, shift):
     return out
 
 
+def summa_noc_trace(mesh, tile_bytes: int, schedule: str = "native",
+                    iters: int | None = None, chunks: int = 4, params=None):
+    """NoC cost path: the fabric traffic of a SUMMA run on ``mesh``.
+
+    One phase per iteration ``k``: every row's A-block broadcast (root =
+    column ``k``) plus every column's B-block broadcast (root = row
+    ``k``) share the fabric concurrently, then a hardware barrier closes
+    the phase — exactly the traffic the shard_map program above would put
+    on the paper's mesh.  Replay with ``noc.traffic.trace.replay`` to get
+    the contended end-to-end iteration time.
+    """
+    from repro.core.noc.traffic.trace import Trace, TrafficEvent
+    from repro.core.topology import Coord
+
+    if mesh.cols != mesh.rows:
+        raise ValueError(f"SUMMA requires a square mesh, got {mesh.cols}x{mesh.rows}")
+    iters = mesh.cols if iters is None else iters
+    trace = Trace(mesh.cols, mesh.rows)
+    everyone = tuple(tuple(c) for c in mesh.coords())
+    for k in range(iters):
+        for y in range(mesh.rows):  # A_{y,k} multicast along row y
+            row = [Coord(x, y) for x in range(mesh.cols)]
+            trace.events.extend(sched.broadcast_noc_events(
+                row, root=k % mesh.cols, nbytes=tile_bytes, schedule=schedule,
+                chunks=chunks, phase=k, params=params))
+        for x in range(mesh.cols):  # B_{k,x} multicast along column x
+            col = [Coord(x, y) for y in range(mesh.rows)]
+            trace.events.extend(sched.broadcast_noc_events(
+                col, root=k % mesh.rows, nbytes=tile_bytes, schedule=schedule,
+                chunks=chunks, phase=k, params=params))
+        trace.events.append(
+            TrafficEvent("barrier", phase=k, dst=(0, 0), sources=everyone))
+    return trace
+
+
 def summa_sharded(A, B, mesh, row_axis="data", col_axis="model",
                   schedule: str = "native", chunks: int = 4):
     """shard_map wrapper: A (M, K), B (K, N), C (M, N) all 2-D block-sharded."""

@@ -71,6 +71,12 @@ class Mesh2D:
         """Y-major consecutive node id (Section 3.2.2 assumption 3)."""
         return c.x * self.rows + c.y
 
+    def coord_of(self, node_id: int) -> Coord:
+        """Inverse of ``node_id``."""
+        if not 0 <= node_id < self.num_tiles:
+            raise ValueError(f"node id {node_id} outside mesh")
+        return Coord(node_id // self.rows, node_id % self.rows)
+
     def xy_route(self, src: Coord, dst: Coord) -> list[Coord]:
         """Dimension-ordered route: X first, then Y. Includes endpoints."""
         if not (self.contains(src) and self.contains(dst)):
@@ -199,6 +205,63 @@ def encodable(coords: Sequence[Coord]) -> bool:
         if sorted(_expand(vals[0], mask, max(vals) + 1)) != vals:
             return False
     return True
+
+
+def multi_address_for(coords: Sequence[Coord]) -> MultiAddress:
+    """The unique ``(dst, mask)`` covering exactly ``coords``.
+
+    Raises ``ValueError`` if the set is not mask-encodable (Section 3.2.2);
+    use :func:`encodable` to test first.
+    """
+    if not encodable(coords):
+        raise ValueError(f"destination set not (dst, mask)-encodable: {coords}")
+    xs = sorted({c.x for c in coords})
+    ys = sorted({c.y for c in coords})
+    x_mask = 0
+    for v in xs:
+        x_mask |= v ^ xs[0]
+    y_mask = 0
+    for v in ys:
+        y_mask |= v ^ ys[0]
+    return MultiAddress(dst=Coord(xs[0], ys[0]), x_mask=x_mask, y_mask=y_mask)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic-traffic destination maps (classic NoC evaluation patterns).
+# Each maps a source coordinate to its deterministic partner; sources whose
+# partner is themselves (pattern fixed points) inject no packet.
+# ---------------------------------------------------------------------------
+
+
+def transpose_coord(mesh: Mesh2D, c: Coord) -> Coord:
+    """Matrix-transpose pattern: ``(x, y) -> (y, x)``; requires a square mesh."""
+    if mesh.cols != mesh.rows:
+        raise ValueError(f"transpose needs a square mesh, got {mesh.cols}x{mesh.rows}")
+    return Coord(c.y, c.x)
+
+
+def bit_complement_coord(mesh: Mesh2D, c: Coord) -> Coord:
+    """Bit-complement pattern: each coordinate reflected across the mesh."""
+    return Coord(mesh.cols - 1 - c.x, mesh.rows - 1 - c.y)
+
+
+def bit_reversal_coord(mesh: Mesh2D, c: Coord) -> Coord:
+    """Bit-reversal pattern on the Y-major node id; needs pow2 tile count."""
+    n = mesh.num_tiles
+    if not is_pow2(n):
+        raise ValueError(f"bit-reversal needs a power-of-two tile count, got {n}")
+    bits = n.bit_length() - 1
+    nid = mesh.node_id(c)
+    rev = 0
+    for i in range(bits):
+        if (nid >> i) & 1:
+            rev |= 1 << (bits - 1 - i)
+    return mesh.coord_of(rev)
+
+
+def neighbor_coord(mesh: Mesh2D, c: Coord) -> Coord:
+    """Nearest-neighbour pattern: one hop +X, wrapping at the mesh edge."""
+    return Coord((c.x + 1) % mesh.cols, c.y)
 
 
 def multicast_fork_tree(

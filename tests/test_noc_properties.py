@@ -7,6 +7,7 @@ independent of calibration constants.
 import dataclasses
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.noc import model as m

@@ -1,6 +1,7 @@
 """Unit + property tests for the 2-D mesh topology and multi-address encoding."""
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import (

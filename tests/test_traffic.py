@@ -1,0 +1,380 @@
+"""Traffic engine: patterns, trace round-trip, event engine, sweeps."""
+
+import time
+
+import pytest
+
+from repro.core.noc.netsim import NoCSim, _StreamState
+from repro.core.noc.params import NoCParams
+from repro.core.noc.traffic import (
+    PATTERNS,
+    SyntheticConfig,
+    Trace,
+    TraceRecorder,
+    collective_storm,
+    fcl_storm,
+    TrafficEvent,
+    replay,
+    saturation_rate,
+    saturation_sweep,
+    summa_storm,
+    synthetic_trace,
+)
+from repro.core.topology import (
+    Coord,
+    Mesh2D,
+    Submesh,
+    bit_complement_coord,
+    bit_reversal_coord,
+    multi_address_for,
+    neighbor_coord,
+    transpose_coord,
+)
+
+P = NoCParams()
+
+
+# ---------------------------------------------------------------------------
+# Topology pattern helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pattern_coord_helpers_are_involutions():
+    mesh = Mesh2D(8, 8)
+    for c in mesh.coords():
+        assert transpose_coord(mesh, transpose_coord(mesh, c)) == c
+        assert bit_complement_coord(mesh, bit_complement_coord(mesh, c)) == c
+        assert bit_reversal_coord(mesh, bit_reversal_coord(mesh, c)) == c
+        assert mesh.contains(neighbor_coord(mesh, c))
+        assert mesh.coord_of(mesh.node_id(c)) == c
+
+
+def test_multi_address_for_roundtrip():
+    mesh = Mesh2D(8, 8)
+    for sub in (Submesh(0, 0, 8, 1), Submesh(4, 0, 4, 4), Submesh(2, 2, 2, 2)):
+        coords = sub.coords()
+        ma = multi_address_for(coords)
+        assert sorted(map(tuple, ma.destinations(mesh))) == sorted(map(tuple, coords))
+    with pytest.raises(ValueError):
+        multi_address_for([Coord(0, 0), Coord(1, 0), Coord(2, 0)])  # not pow2
+
+
+# ---------------------------------------------------------------------------
+# Pattern generators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_pattern_determinism_under_fixed_seed(pattern):
+    mesh = Mesh2D(4, 4)
+    cfg = SyntheticConfig(pattern=pattern, rate=0.05, seed=7, packets_per_node=3)
+    t1, t2 = synthetic_trace(mesh, cfg), synthetic_trace(mesh, cfg)
+    assert t1.to_json() == t2.to_json()
+    if pattern in ("uniform", "hotspot"):
+        t3 = synthetic_trace(mesh, SyntheticConfig(
+            pattern=pattern, rate=0.05, seed=8, packets_per_node=3))
+        assert t1.to_json() != t3.to_json()
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_patterns_have_no_self_packets_and_replay(pattern):
+    mesh = Mesh2D(4, 4)
+    cfg = SyntheticConfig(pattern=pattern, rate=0.1, seed=1, packets_per_node=2)
+    trace = synthetic_trace(mesh, cfg)
+    assert trace.events, pattern
+    assert all(e.src != e.dst for e in trace.events)
+    res = replay(trace, params=P)
+    assert res.makespan > 0
+    assert all(s.done_cycle >= s.inject_cycle for s in res.streams)
+
+
+def test_hotspot_concentrates_traffic():
+    mesh = Mesh2D(8, 8)
+    cfg = SyntheticConfig(pattern="hotspot", rate=0.05, seed=0,
+                          packets_per_node=8, hotspot=(3, 3), hotspot_frac=0.7)
+    trace = synthetic_trace(mesh, cfg)
+    hits = sum(1 for e in trace.events if e.dst == (3, 3))
+    assert hits > 0.5 * len(trace.events)
+
+
+# ---------------------------------------------------------------------------
+# Trace capture -> serialize -> replay round-trip
+# ---------------------------------------------------------------------------
+
+
+def _capture_workload(sim: NoCSim):
+    sim.add_unicast(Coord(0, 0), Coord(3, 0), 4096)
+    sim.add_multicast(Coord(0, 0), Submesh(0, 0, 4, 4).multi_address(),
+                      8192, start=10.0)
+    sim.add_reduction([Coord(x, 0) for x in range(4)], Coord(0, 0), 2048,
+                      start=5.0)
+
+
+def test_trace_capture_roundtrip_identical_completions():
+    mesh = Mesh2D(4, 4)
+    sim = NoCSim(mesh, P)
+    rec = TraceRecorder.attach(sim)
+    _capture_workload(sim)
+    direct = sim.run()
+    assert [e.kind for e in rec.trace.events] == ["unicast", "multicast", "reduction"]
+
+    r1 = replay(rec.trace, params=P)
+    assert r1.makespan == direct
+    # serialize -> parse -> replay again: bit-identical completion cycles
+    r2 = replay(Trace.from_json(rec.trace.to_json()), params=P)
+    assert [s.done_cycle for s in r2.streams] == [s.done_cycle for s in r1.streams]
+    assert r2.makespan == r1.makespan
+
+
+def test_trace_records_barriers_and_phases():
+    mesh = Mesh2D(4, 4)
+    sim = NoCSim(mesh, P)
+    rec = TraceRecorder.attach(sim)
+    parts = [Coord(x, 0) for x in range(4)]
+    sim.barrier_hw(parts, Coord(0, 0))
+    sim.add_unicast(Coord(0, 0), Coord(3, 3), 1024)
+    assert [e.kind for e in rec.trace.events] == ["barrier", "unicast"]
+    # the barrier's internal reduction is not re-recorded, and it bumped phase
+    assert rec.trace.events[1].phase == 1
+    res = replay(rec.trace, params=P)
+    assert res.phase_end[0] == pytest.approx(P.barrier_hw(4))
+    assert res.makespan > res.phase_end[0]
+
+
+# ---------------------------------------------------------------------------
+# Event-driven engine vs. legacy per-cycle loop: bit-identical
+# ---------------------------------------------------------------------------
+
+
+def _netsim_cases():
+    mesh = Mesh2D(4, 4)
+    yield mesh, lambda s: s.add_unicast(Coord(0, 0), Coord(3, 0), 4096)
+    for size in (1024, 8192, 32768):
+        yield mesh, (lambda s, sz=size: s.add_multicast(
+            Coord(0, 0), Submesh(0, 0, 4, 1).multi_address(), sz))
+        yield mesh, (lambda s, sz=size: s.add_multicast(
+            Coord(0, 0), Submesh(0, 0, 4, 4).multi_address(), sz))
+        yield mesh, (lambda s, sz=size: s.add_reduction(
+            [Coord(x, 0) for x in range(4)], Coord(0, 0), sz))
+    yield mesh, (lambda s: s.add_reduction(
+        [Coord(x, y) for x in range(4) for y in range(4)], Coord(0, 0), 32768))
+    both = Mesh2D(4, 1)
+    def two(s):
+        s.add_unicast(Coord(0, 0), Coord(3, 0), 8192)
+        s.add_unicast(Coord(0, 0), Coord(3, 0), 8192)
+    yield both, two
+    def mixed(s):
+        s.add_unicast(Coord(0, 0), Coord(3, 0), 4096)
+        s.add_multicast(Coord(0, 0), Submesh(0, 0, 4, 4).multi_address(),
+                        8192, start=13.0)
+        s.add_reduction([Coord(x, y) for x in range(4) for y in range(4)],
+                        Coord(0, 0), 8192, start=7.0)
+        s.add_unicast(Coord(3, 3), Coord(0, 0), 2048, start=300.0)
+    yield mesh, mixed
+
+
+@pytest.mark.parametrize("case", range(13))
+def test_event_engine_bit_identical_to_cycle_loop(case):
+    mesh, build = list(_netsim_cases())[case]
+    a, b = NoCSim(mesh, P), NoCSim(mesh, P)
+    build(a)
+    build(b)
+    ta = a.run(engine="cycle")
+    tb = b.run(engine="event")
+    assert ta == tb
+    assert a._rr == b._rr  # arbitration counters stay in lockstep
+    for sa, sb in zip(a.streams, b.streams):
+        assert sa.done_cycle == sb.done_cycle
+        assert sa.arrivals == sb.arrivals
+
+
+def test_event_engine_bit_identical_on_synthetic_batch():
+    mesh = Mesh2D(4, 4)
+    trace = synthetic_trace(mesh, SyntheticConfig(
+        pattern="uniform", rate=0.05, seed=2, packets_per_node=3))
+    r_cycle = replay(trace, params=P, engine="cycle")
+    r_event = replay(trace, params=P, engine="event")
+    assert [s.done_cycle for s in r_cycle.streams] == \
+           [s.done_cycle for s in r_event.streams]
+
+
+def test_run_on_empty_stream_list_returns_zero():
+    sim = NoCSim(Mesh2D(2, 2), P)
+    assert sim.run() == 0
+    assert sim.run(engine="cycle") == 0
+
+
+def test_deadlock_detected_early_not_at_timeout():
+    """A stream whose only edge waits on an upstream that never arrives
+    must raise promptly (livelock detection), not spin to max_cycles."""
+    for engine in ("event", "cycle"):
+        sim = NoCSim(Mesh2D(2, 2), P)
+        e_up = (Coord(0, 0), Coord(1, 0))
+        e_dn = (Coord(1, 0), Coord(1, 1))
+        sim.streams.append(_StreamState(
+            n_beats=1, prereqs={e_dn: [e_up]}, groups=[[e_dn]],
+            rate={}, inject={}, finals=[e_dn]))
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="deadlock"):
+            sim.run(engine=engine)
+        assert time.perf_counter() - t0 < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Saturation sweeps
+# ---------------------------------------------------------------------------
+
+RATES = (0.005, 0.02, 0.05, 0.1, 0.2)
+
+
+@pytest.mark.parametrize("pattern", ["uniform", "hotspot"])
+def test_sweep_latency_monotone_in_injection_rate(pattern):
+    pts = saturation_sweep(Mesh2D(8, 8), pattern, RATES, nbytes=256,
+                           packets_per_node=4, seed=1, params=P)
+    lats = [p.mean_latency for p in pts]
+    assert all(lat > 0 for lat in lats)
+    assert all(b >= a - 1e-9 for a, b in zip(lats, lats[1:])), lats
+    assert lats[-1] > lats[0]  # contention must actually bite
+    assert all(p.throughput > 0 for p in pts)
+    # any rise crosses a barely-above-1 knee; an absurd knee reports inf
+    assert saturation_rate(pts, knee=1.0 + 1e-9) in [p.rate for p in pts]
+    assert saturation_rate(pts, knee=1e9) == float("inf")
+
+
+def test_sweep_16x16_many_streams_completes_fast():
+    """Acceptance: >= 64 concurrent streams on a 16x16 mesh in seconds."""
+    mesh = Mesh2D(16, 16)
+    t0 = time.perf_counter()
+    pts = saturation_sweep(mesh, "uniform", (0.01, 0.05, 0.2), nbytes=256,
+                           packets_per_node=1, seed=0, params=P)
+    elapsed = time.perf_counter() - t0
+    assert all(p.packets >= 64 for p in pts)
+    assert elapsed < 60.0, f"sweep took {elapsed:.1f}s"
+
+
+# ---------------------------------------------------------------------------
+# Collective storms
+# ---------------------------------------------------------------------------
+
+
+def test_summa_storm_matches_manual_phase_sum():
+    mesh = Mesh2D(4, 4)
+    trace = summa_storm(mesh, tile_bytes=2048, iters=2)
+    assert trace.num_phases == 2
+    res = replay(trace, params=P)
+    assert len(res.streams) == 2 * (mesh.rows + mesh.cols)
+    assert res.phase_end[0] < res.phase_end[1]
+    # phase 1 streams all start after phase 0 fully drained + barrier
+    p0_end = max(s.done_cycle for s in res.streams[: mesh.rows + mesh.cols])
+    p1_starts = [s.inject_cycle for s in res.streams[mesh.rows + mesh.cols:]]
+    assert all(st >= p0_end for st in p1_starts)
+
+
+def test_storm_overlap_vs_same_row_contention():
+    """Link-disjoint collectives overlap for free; shared-row ones don't.
+
+    The storm's row multicasts and column reductions touch disjoint links
+    (the paper's concurrent-collective win), so its makespan matches a
+    solo multicast.  Two multicasts down the *same* row must interfere —
+    the effect idle-network model sums cannot see.
+    """
+    mesh = Mesh2D(8, 8)
+    solo = NoCSim(mesh, P)
+    solo.add_multicast(Coord(0, 0), Submesh(0, 0, 8, 1).multi_address(), 2048)
+    t_solo = solo.run()
+    storm = replay(collective_storm(mesh, tile_bytes=2048, phases=1), params=P)
+    assert storm.makespan == t_solo
+    row_ma = Submesh(0, 0, 8, 1).multi_address()
+    shared = Trace(8, 8, [
+        TrafficEvent("multicast", nbytes=2048, src=(0, 0), dst=tuple(row_ma.dst),
+                     x_mask=row_ma.x_mask, y_mask=row_ma.y_mask),
+        TrafficEvent("multicast", nbytes=2048, src=(0, 0), dst=tuple(row_ma.dst),
+                     x_mask=row_ma.x_mask, y_mask=row_ma.y_mask),
+    ])
+    assert replay(shared, params=P).makespan > t_solo
+
+
+def test_fcl_storm_replays():
+    res = replay(fcl_storm(Mesh2D(4, 4), tile_bytes=1024, phases=2), params=P)
+    assert len(res.streams) == 8
+    assert res.makespan > 0
+
+
+def test_storms_reject_non_pow2_mesh():
+    for storm in (summa_storm, fcl_storm, collective_storm):
+        with pytest.raises(ValueError, match="power-of-two"):
+            storm(Mesh2D(6, 6))
+
+
+def test_barrier_only_phase_stacks_offsets():
+    """A phase with no streams must add its barrier on top of the
+    accumulated offset, not rewind to the last stream completion."""
+    parts = tuple((x, 0) for x in range(4))
+    tr = Trace(4, 4, [
+        TrafficEvent("unicast", phase=0, nbytes=1024, src=(0, 0), dst=(3, 0)),
+        TrafficEvent("barrier", phase=0, dst=(0, 0), sources=parts),
+        TrafficEvent("barrier", phase=1, dst=(0, 0), sources=parts),
+        TrafficEvent("unicast", phase=2, nbytes=1024, src=(0, 0), dst=(3, 0)),
+    ])
+    res = replay(tr, params=P)
+    assert res.phase_end[1] == pytest.approx(res.phase_end[0] + P.barrier_hw(4))
+    assert res.streams[1].inject_cycle >= res.phase_end[1]
+
+
+def test_sw_barrier_flavor_survives_capture_and_costs_more():
+    mesh = Mesh2D(8, 4)
+    parts = [Coord(i % 8, i // 8) for i in range(32)]
+    sw_sim, hw_sim = NoCSim(mesh, P), NoCSim(mesh, P)
+    rec_sw, rec_hw = TraceRecorder.attach(sw_sim), TraceRecorder.attach(hw_sim)
+    sw_sim.barrier_sw(parts, Coord(0, 0))
+    hw_sim.barrier_hw(parts, Coord(0, 0))
+    assert rec_sw.trace.events[0].flavor == "sw"
+    assert rec_hw.trace.events[0].flavor == "hw"
+    r_sw = replay(Trace.from_json(rec_sw.trace.to_json()), params=P)
+    r_hw = replay(Trace.from_json(rec_hw.trace.to_json()), params=P)
+    assert r_sw.phase_end[0] == pytest.approx(P.barrier_sw(32))
+    assert r_hw.phase_end[0] == pytest.approx(P.barrier_hw(32))
+    assert r_sw.phase_end[0] > r_hw.phase_end[0]
+
+
+# ---------------------------------------------------------------------------
+# Cost-path emitters (schedules / summa / overlap)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_cost_paths_native_beats_software():
+    from repro.core import schedules as sched
+
+    row = [Coord(x, 0) for x in range(8)]
+    mk = lambda evs: Trace(8, 8, list(evs))  # noqa: E731
+    times = {}
+    for s in ("native", "chain", "tree"):
+        times[s] = replay(mk(sched.broadcast_noc_events(
+            row, 0, 8192, schedule=s, params=P)), params=P).makespan
+    assert times["native"] < times["tree"] < times["chain"]
+    red = {}
+    for s in ("native", "tree"):
+        red[s] = replay(mk(sched.all_reduce_noc_events(
+            row, 8192, schedule=s, params=P)), params=P).makespan
+    assert red["native"] < red["tree"]
+
+
+def test_summa_noc_trace_contended_replay():
+    from repro.core.summa import summa_noc_trace
+
+    mesh = Mesh2D(4, 4)
+    hw = replay(summa_noc_trace(mesh, 2048, schedule="native"), params=P)
+    sw = replay(summa_noc_trace(mesh, 2048, schedule="tree"), params=P)
+    assert hw.makespan < sw.makespan
+    assert hw.phase_end == sorted(hw.phase_end)
+
+
+def test_overlap_ring_traces_replay():
+    from repro.core.overlap import ag_matmul_noc_trace, matmul_rs_noc_trace
+
+    mesh = Mesh2D(4, 4)
+    row = [Coord(x, 0) for x in range(4)]
+    ag = replay(ag_matmul_noc_trace(mesh, row, 2048), params=P)
+    rs = replay(matmul_rs_noc_trace(mesh, row, 2048), params=P)
+    # bidirectional ring: half the sequential phases of the unidirectional
+    assert ag.makespan < rs.makespan
