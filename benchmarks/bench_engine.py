@@ -1,0 +1,167 @@
+"""Engine shoot-out: cycle vs event vs heap wall-clock, storm + sweep.
+
+The perf trajectory guard for the simulator hot path.  Times the three
+bit-identical engines on collective storms (8x8/16x16/32x32) and
+injection-rate sweeps, checks the results agree, and emits
+``BENCH_engine.json`` at the repo root so future PRs have a baseline to
+regress against.  The 64x64 row demonstrates the regime the heap engine
+newly opens: a full injection-rate curve in seconds.
+
+Run standalone as a CI gate::
+
+    PYTHONPATH=src python -m benchmarks.bench_engine --smoke
+
+exits non-zero if the heap engine is slower than the event engine on the
+16x16 storm scenario or any engine disagrees on a makespan.
+
+The legacy per-cycle loop is only timed where it finishes in reasonable
+wall-clock (8x8/16x16 storms, 8x8 sweep); larger scenarios record
+``null`` for it rather than burning minutes re-measuring a known order
+of magnitude.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.noc.traffic import collective_storm, replay, saturation_sweep
+from repro.core.topology import Mesh2D
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+
+SWEEP_RATES = (0.01, 0.05, 0.2)
+
+
+def _time_storm(mesh_side: int, engine: str, phases: int = 2,
+                tile_bytes: int = 2048) -> tuple[float, int]:
+    trace = collective_storm(Mesh2D(mesh_side, mesh_side),
+                             tile_bytes=tile_bytes, phases=phases)
+    t0 = time.perf_counter()
+    res = replay(trace, params=PAPER_MICRO, engine=engine)
+    return time.perf_counter() - t0, res.makespan
+
+
+def _time_sweep(mesh_side: int, engine: str, workers: int = 0) -> tuple[float, int]:
+    t0 = time.perf_counter()
+    pts = saturation_sweep(
+        Mesh2D(mesh_side, mesh_side), "uniform", SWEEP_RATES, nbytes=256,
+        packets_per_node=1, seed=0, params=PAPER_MICRO, engine=engine,
+        workers=workers,
+    )
+    return time.perf_counter() - t0, pts[-1].makespan
+
+
+# scenario -> {engine: runner or None (too slow to time)}
+SCENARIOS = {
+    "storm8": {e: (lambda e=e: _time_storm(8, e)) for e in ("cycle", "event", "heap")},
+    "storm16": {e: (lambda e=e: _time_storm(16, e)) for e in ("cycle", "event", "heap")},
+    "storm32": {
+        "cycle": None,
+        "event": lambda: _time_storm(32, "event", phases=1),
+        "heap": lambda: _time_storm(32, "heap", phases=1),
+    },
+    "sweep8": {e: (lambda e=e: _time_sweep(8, e)) for e in ("cycle", "event", "heap")},
+    "sweep16": {
+        "cycle": None,
+        "event": lambda: _time_sweep(16, "event"),
+        "heap": lambda: _time_sweep(16, "heap"),
+    },
+    "sweep32": {
+        "cycle": None,
+        "event": lambda: _time_sweep(32, "event"),
+        "heap": lambda: _time_sweep(32, "heap"),
+    },
+}
+
+
+def _run_scenarios(names=None) -> dict:
+    out: dict[str, dict] = {}
+    for name, engines in SCENARIOS.items():
+        if names and name not in names:
+            continue
+        walls: dict[str, float | None] = {}
+        makespans = set()
+        for engine, fn in engines.items():
+            if fn is None:
+                walls[engine] = None
+                continue
+            wall, makespan = fn()
+            walls[engine] = round(wall, 4)
+            makespans.add(makespan)
+        if len(makespans) != 1:
+            raise AssertionError(
+                f"{name}: engines disagree on makespan: {sorted(makespans)}"
+            )
+        rec = {"wall_s": walls, "makespan": makespans.pop()}
+        if walls.get("cycle") and walls.get("heap"):
+            rec["speedup_vs_cycle"] = round(walls["cycle"] / walls["heap"], 2)
+        if walls.get("event") and walls.get("heap"):
+            rec["speedup_vs_event"] = round(walls["event"] / walls["heap"], 2)
+        out[name] = rec
+    return out
+
+
+def _sweep64(workers: int) -> dict:
+    rates = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2)
+    t0 = time.perf_counter()
+    pts = saturation_sweep(
+        Mesh2D(64, 64), "uniform", rates, nbytes=256, packets_per_node=1,
+        seed=0, params=PAPER_MICRO, engine="heap", workers=workers,
+    )
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": round(wall, 2),
+        "workers": workers,
+        "points": len(pts),
+        "makespans": [p.makespan for p in pts],
+    }
+
+
+def rows():
+    results = _run_scenarios()
+    workers = min(8, os.cpu_count() or 1)
+    results["sweep64_heap_curve"] = _sweep64(workers)
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    out = []
+    for name, rec in results.items():
+        if name == "sweep64_heap_curve":
+            out.append((name, rec["wall_s"] * 1e6,
+                        f"points={rec['points']};workers={rec['workers']};"
+                        f"feasible={rec['wall_s'] < 60.0}"))
+            continue
+        walls = rec["wall_s"]
+        detail = ";".join(
+            f"{e}={w:.3f}s" if w is not None else f"{e}=skipped"
+            for e, w in walls.items()
+        )
+        for k in ("speedup_vs_cycle", "speedup_vs_event"):
+            if k in rec:
+                detail += f";{k.replace('speedup_vs_', 'x_')}={rec[k]}"
+        out.append((name, (walls.get("heap") or 0.0) * 1e6, detail))
+    return out
+
+
+def smoke() -> int:
+    """CI gate: heap must not be slower than event on the 16x16 storm."""
+    results = _run_scenarios(names={"storm16"})
+    rec = results["storm16"]
+    print(json.dumps(rec, indent=2))
+    if rec["wall_s"]["heap"] > rec["wall_s"]["event"]:
+        print("FAIL: heap engine slower than event engine on storm16")
+        return 1
+    print(f"OK: heap {rec['speedup_vs_event']}x faster than event, "
+          f"{rec['speedup_vs_cycle']}x faster than cycle")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    for name, us, derived in rows():
+        print(f"{name},{us},{derived}")

@@ -18,6 +18,7 @@ MODULES = [
     ("Fig9b_fcl", "benchmarks.bench_fcl"),
     ("Tab1_Fig10_energy", "benchmarks.bench_energy"),
     ("Traffic", "benchmarks.bench_traffic"),
+    ("Engine", "benchmarks.bench_engine"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

@@ -2,9 +2,18 @@
 
 ``params``    — hardware/runtime parameter sets (+ TPU-pod mapping)
 ``model``     — the paper's analytical runtime models, Eqs (1)-(6), (10)-(15)
-``netsim``    — flit-level 2-D-mesh simulator (multicast fork / reduction join)
-``engine``    — event-driven run loop: idle-gap fast-forward, bit-identical
-                to the per-cycle loop; makes 16x16+ meshes tractable
+``netsim``    — flit-level 2-D-mesh simulator (multicast fork / reduction
+                join); streams keep exact Fraction beat arithmetic and
+                expose both per-call (``requests``) and incremental
+                (``ready_units``/``advance_unit``) readiness
+``engine``    — three bit-identical run loops: ``heap`` (default; global
+                min-heap keyed on exact next-ready cycle, lazy
+                invalidation, Fenwick-tracked round-robin positions,
+                incremental per-unit readiness — the 64x64-mesh fast
+                path), ``event`` (idle-gap fast-forward, O(streams) per
+                active cycle) and ``cycle`` (the per-cycle reference
+                loop).  Identical per-stream arrivals, completion cycles
+                and arbitration counter across all three.
 ``traffic``   — traffic engine subsystem:
                 ``traffic.patterns``  seedable synthetic workloads (uniform,
                                       transpose, bit-complement, bit-reversal,
@@ -12,9 +21,12 @@
                                       SUMMA/FCL collective storms
                 ``traffic.trace``     TrafficEvent/Trace serialization, live
                                       TraceRecorder capture, and contended
-                                      phase-by-phase replay
+                                      replay — phase-barrier serialized or
+                                      sliding-window (``mode='window'``,
+                                      double-buffered SUMMA overlap)
                 ``traffic.sweep``     injection-rate vs. latency/throughput
-                                      saturation curves
+                                      saturation curves; ``workers=N`` fans
+                                      points over a process pool
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper
 """

@@ -1,4 +1,4 @@
-"""Event-driven execution engine for the flit-level NoC simulator.
+"""Execution engines for the flit-level NoC simulator.
 
 The original ``NoCSim.run()`` advanced global time one cycle per Python
 loop iteration.  That is fine for a 4x4 micro-benchmark but hopeless for
@@ -6,33 +6,81 @@ saturation sweeps: a DMA round-trip alone is ~50 idle cycles per stream,
 and trace replays of barrier-separated phases spend most of their cycles
 with *no* beat eligible to move anywhere.
 
-This engine keeps the per-cycle arbitration semantics **bit-identical**
-(same round-robin start offset, same busy-link set, same within-cycle
-request ordering) but fast-forwards over idle gaps: whenever a cycle ends
-with no beat having crossed any edge, the next interesting cycle is
+Two accelerated engines keep the per-cycle arbitration semantics
+**bit-identical** (same round-robin start offset, same busy-link set,
+same within-cycle request ordering) to the legacy loop:
 
-    t' = min over pending streams of the earliest cycle at which any
-         fork-group or edge of that stream satisfies its readiness
-         predicate (prereq arrival + 1, inject start, rate spacing),
+``run_event_driven``
+    Fast-forwards over idle gaps: whenever a cycle ends with no beat
+    having crossed any edge, time jumps to the minimum per-stream
+    readiness threshold.  Still O(streams) per active cycle — every
+    pending stream is scanned, and ``requests()`` re-walks a stream's
+    whole edge set.
 
-and time jumps straight to ``t'``.  Readiness thresholds are exact
-integer solutions of the same inequalities ``_StreamState._beat_ready``
-tests, so no event can fire inside the skipped gap, and the round-robin
-counter is advanced by the number of skipped cycles so arbitration on
-either side of a gap matches the per-cycle loop exactly.
+``run_heap``
+    The hot path for large meshes.  Pending streams live in a global
+    min-heap keyed on their *exact* next-ready cycle (the same integer
+    thresholds ``_StreamState._ready_after`` solves), so a cycle touches
+    only the streams that can actually move.  Invariants:
 
-If a cycle is idle and *no* stream has a finite readiness threshold the
-network can never progress again; the engine raises immediately instead
-of spinning to ``max_cycles`` (early deadlock/livelock detection).
+    * **Lazy invalidation** — heap entries are never removed in place; an
+      entry is valid only while it matches the stream's currently
+      scheduled cycle (``sched``), and stale entries are dropped on pop.
+      Within a stream, the per-unit heap uses the same discipline against
+      the cached ``_unit_ready`` cycles.
+    * **Round-robin tie-breaking** — the legacy loop rotates the pending
+      list by ``rr % len(pending)`` each cycle and consumes one counter
+      slot per cycle (idle or not).  The heap engine reproduces this
+      exactly: a Fenwick tree maintains each stream's *live position*
+      (its index in the pending list the legacy loop would have built),
+      ready streams are processed in rotated live-position order, and the
+      arbitration counter is advanced by the final cycle count on exit —
+      so same-cycle entries fire in the identical order and results are
+      bit-identical, arbitration counter included.
+    * **Incremental readiness** — streams expose ``ready_units`` /
+      ``advance_unit`` frontier cursors; an advance dirties only the unit
+      itself and its downstream consumer units, never the full edge walk.
+
+If no pending stream has a finite readiness threshold the network can
+never progress again; all engines raise immediately with a per-stream
+stall report (which streams are stuck, their final-edge frontier beats,
+and the blocking edges) instead of spinning to ``max_cycles``.
 """
 
 from __future__ import annotations
 
+import heapq
 import math
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
-    from repro.core.noc.netsim import NoCSim
+    from repro.core.noc.netsim import NoCSim, _StreamState
+
+
+def gate_dependents(streams: Sequence["_StreamState"]) -> dict[int, list["_StreamState"]]:
+    """Map ``id(gate stream) -> [streams gated on it]`` (window replay)."""
+    deps: dict[int, list] = {}
+    for s in streams:
+        for g in s.gates:
+            deps.setdefault(id(g), []).append(s)
+    return deps
+
+
+def stuck_error(sim: "NoCSim", kind: str, t: int, stuck: Sequence["_StreamState"]) -> RuntimeError:
+    """Build the deadlock/timeout error: name the stuck streams, their
+    final-edge frontier beats and the blocking edges, not just the cycle."""
+    idx = {id(s): i for i, s in enumerate(sim.streams)}
+    lines = []
+    for s in stuck[:4]:
+        lines.append(f"  stream#{idx.get(id(s), '?')}: {s.stall_report()}")
+    more = len(stuck) - 4
+    if more > 0:
+        lines.append(f"  ... and {more} more stuck stream(s)")
+    detail = "\n".join(lines)
+    return RuntimeError(
+        f"netsim {kind} at cycle {t}: {len(stuck)} of {len(sim.streams)} "
+        f"stream(s) cannot advance\n{detail}"
+    )
 
 
 def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
@@ -41,6 +89,7 @@ def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
     Produces exactly the same per-stream arrival times and completion
     cycles as the legacy one-iteration-per-cycle loop.
     """
+    dependents = gate_dependents(sim.streams)
     t = 0
     while t < max_cycles:
         pending = [s for s in sim.streams if s.done_cycle is None]
@@ -67,6 +116,9 @@ def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
                 busy.update(links)
                 s.advance(group, t)  # resets the stream's ready_hint
                 progressed = True
+            if s.done_cycle is not None:
+                for dep in dependents.get(id(s), ()):
+                    dep.gate_released()  # resets the dependent's ready_hint
         if progressed:
             t += 1
             continue
@@ -80,15 +132,172 @@ def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
                 break
             nxt = min(nxt, hint)
         if nxt == math.inf:
-            raise RuntimeError(
-                f"netsim deadlock at cycle {t}: no pending stream can ever advance"
-            )
+            raise stuck_error(sim, "deadlock", t, pending)
         nxt = max(int(nxt), t + 1)
         sim._rr_skip(nxt - t - 1)  # idle cycles still consume arbitration slots
         t = nxt
     unfinished = [s for s in sim.streams if s.done_cycle is None]
     if unfinished:
-        raise RuntimeError(f"netsim deadlock/timeout at cycle {t}")
+        raise stuck_error(sim, "deadlock/timeout", t, unfinished)
     if not sim.streams:
         return 0
     return max(s.done_cycle for s in sim.streams)
+
+
+class _Fenwick:
+    """Binary indexed tree over original stream indices; 1 = still pending.
+
+    ``prefix(i)`` = number of live streams with index < i = the stream's
+    position in the pending list the legacy engine would have built, which
+    is what the round-robin rotation is defined over.
+    """
+
+    __slots__ = ("n", "tree")
+
+    def __init__(self, n: int):
+        self.n = n
+        self.tree = [0] * (n + 1)
+
+    def add(self, i: int, delta: int) -> None:
+        i += 1
+        while i <= self.n:
+            self.tree[i] += delta
+            i += i & -i
+
+    def prefix(self, i: int) -> int:
+        s = 0
+        while i > 0:
+            s += self.tree[i]
+            i -= i & -i
+        return s
+
+
+def run_heap(sim: "NoCSim", max_cycles: int) -> int:
+    """Heap-scheduled engine: bit-identical to the per-cycle loop, but a
+    cycle only ever touches the streams whose exact next-ready threshold
+    has been reached (plus carried arbitration losers)."""
+    streams = sim.streams
+    n = len(streams)
+    live = [s.done_cycle is None for s in streams]
+    n_live = sum(live)
+    if n_live == 0:
+        if not streams:
+            return 0
+        return max(s.done_cycle for s in streams)
+
+    dependents = gate_dependents(streams)
+    dep_idx: dict[int, list[int]] = {}
+    if dependents:
+        pos_of = {id(s): i for i, s in enumerate(streams)}
+        dep_idx = {
+            pos_of[gid]: [pos_of[id(d)] for d in ds]
+            for gid, ds in dependents.items()
+            if gid in pos_of
+        }
+
+    fen = _Fenwick(n)
+    gheap: list[tuple[int, int]] = []   # (next-ready cycle, stream index)
+    sched: list = [None] * n            # lazy-invalidation: entry valid iff
+                                        # its cycle == sched[stream index]
+    # Busy-link arbitration interns each physical link as a small int so
+    # the inner busy-set tests never hash Coord tuples.
+    link_id: dict = {}
+    linkids: list = [None] * n          # per stream: per unit, tuple of ids
+    for i, s in enumerate(streams):
+        if not live[i]:
+            continue
+        fen.add(i, 1)
+        s._heap_init()
+        linkids[i] = [
+            tuple(
+                link_id.setdefault(e, len(link_id)) for e in links
+            )
+            for links in s._unit_links
+        ]
+        c = s.next_ready()
+        if c is not None:
+            sched[i] = c
+            gheap.append((c, i))
+    heapq.heapify(gheap)
+
+    rr_base = sim._rr
+    t = -1          # last processed cycle
+    carry: list[int] = []  # streams still ready after losing arbitration at t
+    while n_live:
+        if carry:
+            t_next = t + 1
+        else:
+            t_next = None
+            while gheap:
+                c, i = gheap[0]
+                if not live[i] or sched[i] != c:
+                    heapq.heappop(gheap)  # stale (lazy invalidation)
+                    continue
+                t_next = c
+                break
+            if t_next is None:
+                raise stuck_error(
+                    sim, "deadlock", t + 1,
+                    [s for i, s in enumerate(streams) if live[i]],
+                )
+        if t_next >= max_cycles:
+            raise stuck_error(
+                sim, "deadlock/timeout", max_cycles,
+                [s for i, s in enumerate(streams) if live[i]],
+            )
+        t = t_next
+
+        ready = set(carry)
+        carry = []
+        while gheap and gheap[0][0] <= t:
+            c, i = heapq.heappop(gheap)
+            if live[i] and sched[i] == c:
+                ready.add(i)
+        # Rotated live-position order == the legacy pending-list rotation.
+        start = (rr_base + t) % n_live
+        ordered = sorted(
+            ready, key=lambda i: (fen.prefix(i) - start) % n_live
+        )
+        busy: set = set()
+        finished: list[int] = []
+        for i in ordered:
+            s = streams[i]
+            lids = linkids[i]
+            for ui in list(s.ready_units(t)):
+                links = lids[ui]
+                if any(e in busy for e in links):
+                    continue
+                busy.update(links)
+                s.advance_unit(ui, t)
+            if s.done_cycle is not None:
+                finished.append(i)
+                continue
+            c = s.next_ready()
+            if c is None:
+                sched[i] = None       # blocked until a gate stream drains
+            elif c <= t + 1:
+                sched[i] = t + 1      # still ready (or ready again) next cycle
+                carry.append(i)
+            else:
+                sched[i] = c
+                heapq.heappush(gheap, (c, i))
+        for i in finished:
+            live[i] = False
+            sched[i] = None
+            fen.add(i, -1)
+            n_live -= 1
+            for d in dep_idx.get(i, ()):
+                if not live[d]:
+                    continue
+                sd = streams[d]
+                if any(g.done_cycle is None for g in sd.gates):
+                    continue
+                sd.gate_released()
+                c = sd.next_ready()
+                if c is not None and (sched[d] is None or c < sched[d]):
+                    sched[d] = c
+                    heapq.heappush(gheap, (c, d))
+    # One arbitration slot per cycle examined, exactly like the legacy
+    # loop (idle gaps included): cycles 0..t inclusive.
+    sim._rr = rr_base + t + 1
+    return max(s.done_cycle for s in streams)

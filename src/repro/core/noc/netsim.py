@@ -23,15 +23,26 @@ The simulator is used to validate the analytical models of ``model.py``
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import math
+from fractions import Fraction
 from typing import Optional, Sequence
 
-from repro.core.noc.engine import run_event_driven
+from repro.core.noc.engine import run_event_driven, run_heap
 from repro.core.noc.params import NoCParams
 from repro.core.topology import Coord, Mesh2D, MultiAddress, multicast_fork_tree, reduction_join_tree
 
 Edge = tuple[Coord, Coord]  # (from_node, to_node); from==to encodes local inject/eject
+
+
+def _frac(v) -> Fraction:
+    """Exact cycle quantity.  ``Fraction(float)`` is the exact binary value,
+    so float-typed call sites convert losslessly and every engine computes
+    the same integer readiness thresholds (no ulp drift across long storms,
+    unlike the former ``start + b * rate`` float accumulation)."""
+    return v if isinstance(v, Fraction) else Fraction(v)
 
 
 @dataclasses.dataclass
@@ -44,23 +55,67 @@ class _StreamState:
     ``rate[e]``     — minimum cycles between consecutive beats on e.
     ``inject[e]``   — (start_cycle, rate): source-side availability of beats.
     ``finals``      — edges whose completion terminates the stream.
+    ``gates``       — other streams that must fully drain before any edge of
+                      this stream becomes ready; the effective time origin of
+                      the inject schedule is then ``max(gate done) + 1``
+                      (window-mode trace replay: phase k+1 injects as soon
+                      as its phase-k source streams drain).
+
+    All rate/inject quantities are stored as exact :class:`Fraction` cycle
+    values; readiness thresholds are exact integer ceilings of the same
+    inequalities, so the per-cycle, event-driven and heap engines agree
+    bit-for-bit by construction.
+
+    Readiness is evaluated two ways over the same *unit* list (fork groups
+    in construction order, then loose prereq-only edges):
+
+    * :meth:`requests` / :meth:`next_ready_cycle` recompute per call — the
+      reference semantics used by the ``cycle`` and ``event`` engines;
+    * the incremental API (:meth:`ready_units` / :meth:`advance_unit` /
+      :meth:`next_ready`) keeps a per-unit frontier cursor and cached
+      next-ready cycle, invalidating only the advanced unit and its
+      downstream consumers — the hot path of the ``heap`` engine, which
+      never re-walks the full edge set on an active cycle.
     """
 
     n_beats: int
     prereqs: dict[Edge, list[Edge]]
     groups: list[list[Edge]]
-    rate: dict[Edge, float]
-    inject: dict[Edge, tuple[float, float]]
+    rate: dict[Edge, Fraction]
+    inject: dict[Edge, tuple[Fraction, Fraction]]
     finals: list[Edge]
     arrivals: dict[Edge, list[int]] = dataclasses.field(default_factory=dict)
     done_cycle: Optional[int] = None
     # Earliest cycle this stream could possibly advance, given its current
     # arrivals.  Readiness depends only on *intra-stream* state (prereq
-    # arrivals, inject schedule, rate spacing) — other streams interact
-    # solely by blocking links within a cycle — so the hint stays valid
-    # until this stream itself advances.  None = unknown/dirty;
-    # ``math.inf`` = blocked until an own advance (or forever).
+    # arrivals, inject schedule, rate spacing, gate completion) — other
+    # streams interact solely by blocking links within a cycle — so the
+    # hint stays valid until this stream itself advances (or a gate stream
+    # completes, which the engines invalidate explicitly).  None =
+    # unknown/dirty; ``math.inf`` = blocked until an own advance (or
+    # forever).
     ready_hint: Optional[float] = None
+    gates: list["_StreamState"] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.rate:
+            self.rate = {e: _frac(r) for e, r in self.rate.items()}
+        if self.inject:
+            self.inject = {
+                e: (_frac(s), _frac(r)) for e, (s, r) in self.inject.items()
+            }
+        # Lazy structures (built on first use, shared across runs).
+        self._units: Optional[list[tuple[Edge, ...]]] = None
+        self._unit_consumers: Optional[list[tuple[int, ...]]] = None
+        self._uinfo: list[tuple] = []
+        self._unit_links: list[tuple[Edge, ...]] = []
+        self._finals_set: frozenset[Edge] = frozenset(self.finals)
+        # Heap-engine state (rebuilt per run by _heap_init).
+        self._unit_ready: list[Optional[int]] = []
+        self._uheap: list[tuple[int, int]] = []
+        self._ready_list: list[int] = []
+        self._ready_set: set[int] = set()
+        self._gate_t0: Optional[int] = None
 
     def edges(self) -> list[Edge]:
         out = set(self.prereqs)
@@ -71,8 +126,24 @@ class _StreamState:
     def _crossed(self, e: Edge) -> int:
         return len(self.arrivals.get(e, ()))
 
+    def _t0(self) -> Optional[int]:
+        """Time origin of the inject schedule: 0 for ungated streams, the
+        cycle after the last gate stream drains otherwise (``None`` while
+        any gate is still in flight — the stream is not ready at any t)."""
+        if not self.gates:
+            return 0
+        if self._gate_t0 is None:
+            done = [g.done_cycle for g in self.gates]
+            if any(d is None for d in done):
+                return None
+            self._gate_t0 = max(done) + 1  # drained at d -> injectable at d+1
+        return self._gate_t0
+
     def _beat_ready(self, e: Edge, b: int, t: int) -> bool:
         if b >= self.n_beats:
+            return False
+        t0 = self._t0()
+        if t0 is None or t < t0:
             return False
         for up in self.prereqs.get(e, ()):
             arr = self.arrivals.get(up, ())
@@ -80,95 +151,332 @@ class _StreamState:
                 return False
         if e in self.inject:
             start, rate = self.inject[e]
-            if t < start + b * rate:
+            if t < t0 + start + b * rate:
                 return False
-        r = self.rate.get(e, 1.0)
+        r = self.rate.get(e, 1)
         arr = self.arrivals.get(e, ())
         if arr and arr[-1] > t - r:
             return False
         return True
 
+    # -- unit structure ----------------------------------------------------
+    #
+    # A *unit* is the atomic request granularity: one fork group, or one
+    # loose prereq-only edge.  Unit order == the order ``requests`` has
+    # always returned groups in, so arbitration is unchanged.  Every edge
+    # belongs to at most one unit (builders guarantee this); an edge that
+    # appears only as someone's prereq and in no unit can never advance.
+
+    def _ensure_units(self) -> None:
+        if self._units is not None:
+            return
+        units: list[tuple[Edge, ...]] = [tuple(g) for g in self.groups]
+        seen = {e for g in self.groups for e in g}
+        units.extend((e,) for e in self.prereqs if e not in seen)
+        edge_unit: dict[Edge, int] = {}
+        for i, u in enumerate(units):
+            for e in u:
+                edge_unit[e] = i
+        consumers: list[set[int]] = [set() for _ in units]
+        for i, u in enumerate(units):
+            for e in u:
+                for up in self.prereqs.get(e, ()):
+                    j = edge_unit.get(up)
+                    if j is not None and j != i:
+                        consumers[j].add(i)
+        self._units = units
+        self._unit_consumers = [tuple(sorted(c)) for c in consumers]
+        # Compiled per-unit readiness records for the incremental hot path:
+        # direct references to the arrival lists (no Edge hashing) and
+        # integer-only inject/rate ceilings.  ceil(s + b*r) over Fractions
+        # s=sn/d, r=rn/d is -(-(sn + b*rn)//d); ceil(arr[-1] + r) for
+        # integer arrivals is arr[-1] + ceil(r).  Arrival lists are created
+        # eagerly (for prereq-only edges too) so every engine sees the same
+        # ``arrivals`` dict shape and the records stay valid as they fill.
+        uinfo = []
+        for u in units:
+            recs = []
+            for e in u:
+                arr = self.arrivals.setdefault(e, [])
+                ups = tuple(
+                    self.arrivals.setdefault(up, [])
+                    for up in self.prereqs.get(e, ())
+                )
+                inj = None
+                if e in self.inject:
+                    s, r = self.inject[e]
+                    d = s.denominator * r.denominator // math.gcd(
+                        s.denominator, r.denominator
+                    )
+                    inj = (
+                        s.numerator * (d // s.denominator),
+                        r.numerator * (d // r.denominator),
+                        d,
+                    )
+                recs.append((arr, ups, inj, math.ceil(self.rate.get(e, 1))))
+            uinfo.append(tuple(recs))
+        self._uinfo = uinfo
+        self._unit_links = [
+            tuple(e for e in u if e[0] != e[1]) for u in units
+        ]
+        self._unit_has_final = [
+            not self._finals_set.isdisjoint(u) for u in units
+        ]
+        self._final_arrs = [
+            self.arrivals.setdefault(e, []) for e in self.finals
+        ]
+
     def requests(self, t: int) -> list[list[Edge]]:
         """Fork-atomic edge groups that could advance one beat at cycle t."""
+        self._ensure_units()
         reqs = []
-        seen = set()
-        for g in self.groups:
-            b = self._crossed(g[0])
-            if all(self._crossed(e) == b for e in g) and all(
-                self._beat_ready(e, b, t) for e in g
+        for u in self._units:
+            b = len(self.arrivals.get(u[0], ()))
+            if len(u) > 1 and any(
+                len(self.arrivals.get(e, ())) != b for e in u
             ):
-                reqs.append(list(g))
-            seen.update(g)
-        for e in self.prereqs:
-            if e in seen:
                 continue
-            if self._beat_ready(e, self._crossed(e), t):
-                reqs.append([e])
+            if all(self._beat_ready(e, b, t) for e in u):
+                reqs.append(list(u))
         return reqs
 
-    def advance(self, group: list[Edge], t: int) -> None:
+    def advance(self, group: Sequence[Edge], t: int) -> None:
         self.ready_hint = None
         for e in group:
             self.arrivals.setdefault(e, []).append(t)
-        if self.done_cycle is None and all(
-            self._crossed(e) >= self.n_beats for e in self.finals
-        ):
-            self.done_cycle = t
+        # Completion can only change when a final edge just advanced.
+        if self.done_cycle is None and not self._finals_set.isdisjoint(group):
+            if all(self._crossed(e) >= self.n_beats for e in self.finals):
+                self.done_cycle = t
 
     def _ready_after(self, e: Edge, b: int) -> Optional[int]:
         """Earliest integer cycle at which ``_beat_ready(e, b, .)`` holds.
 
         ``None`` means "not until some other edge advances first" (beat
-        exhausted, or an upstream arrival for beat ``b`` is still missing)
-        — such edges contribute no event to the idle fast-forward.
+        exhausted, an upstream arrival for beat ``b`` still missing, or a
+        gate stream still in flight) — such edges contribute no event to
+        the idle fast-forward.  Thresholds are exact integer ceilings of
+        Fraction arithmetic, so they agree with ``_beat_ready`` exactly.
         """
         if b >= self.n_beats:
             return None
-        thr = 0
+        t0 = self._t0()
+        if t0 is None:
+            return None
+        thr = t0
         for up in self.prereqs.get(e, ()):
             arr = self.arrivals.get(up, ())
             if len(arr) <= b:
                 return None
-            thr = max(thr, arr[b] + 1)
+            if arr[b] + 1 > thr:
+                thr = arr[b] + 1
         if e in self.inject:
             start, rate = self.inject[e]
-            thr = max(thr, math.ceil(start + b * rate))
+            thr = max(thr, math.ceil(t0 + start + b * rate))
         arr = self.arrivals.get(e, ())
         if arr:
-            thr = max(thr, math.ceil(arr[-1] + self.rate.get(e, 1.0)))
+            thr = max(thr, math.ceil(arr[-1] + self.rate.get(e, 1)))
+        return thr
+
+    def _unit_next(self, i: int) -> Optional[int]:
+        """Earliest cycle unit ``i`` can fire its next beat (None=blocked).
+
+        Integer-only mirror of :meth:`_ready_after` over the compiled unit
+        records — the heap engine's innermost loop."""
+        info = self._uinfo[i]
+        b = len(info[0][0])
+        if b >= self.n_beats:
+            return None
+        if len(info) > 1:
+            for rec in info:
+                if len(rec[0]) != b:
+                    return None
+        t0 = 0
+        if self.gates:
+            t0 = self._t0()
+            if t0 is None:
+                return None
+        thr = t0
+        for arr, ups, inj, r_up in info:
+            for ua in ups:
+                if len(ua) <= b:
+                    return None
+                v = ua[b] + 1
+                if v > thr:
+                    thr = v
+            if inj is not None:
+                sn, rn, d = inj
+                v = t0 - (-(sn + b * rn) // d)
+                if v > thr:
+                    thr = v
+            if arr:
+                v = arr[-1] + r_up
+                if v > thr:
+                    thr = v
         return thr
 
     def next_ready_cycle(self) -> Optional[int]:
         """Earliest cycle at which any request can fire, given current
         arrivals (callers invoke it on idle cycles, where it necessarily
-        exceeds the current cycle).
-
-        Exact mirror of ``requests``: fork groups need all member edges on
-        the same beat and every member ready; loose prereq edges need only
-        themselves.  Used by the event-driven engine to skip idle gaps.
+        exceeds the current cycle).  Full recompute — the reference
+        semantics mirrored incrementally by :meth:`next_ready`.
         """
+        self._ensure_units()
         best: Optional[int] = None
-        seen = set()
-        for g in self.groups:
-            b = self._crossed(g[0])
-            if all(self._crossed(e) == b for e in g):
-                thr = 0
-                for e in g:
-                    r = self._ready_after(e, b)
-                    if r is None:
-                        thr = None
-                        break
-                    thr = max(thr, r)
-                if thr is not None and (best is None or thr < best):
-                    best = thr
-            seen.update(g)
-        for e in self.prereqs:
-            if e in seen:
-                continue
-            r = self._ready_after(e, self._crossed(e))
-            if r is not None and (best is None or r < best):
-                best = r
+        for i in range(len(self._units)):
+            c = self._unit_next(i)
+            if c is not None and (best is None or c < best):
+                best = c
         return best
+
+    # -- incremental readiness (heap-engine hot path) ----------------------
+
+    def _heap_init(self) -> None:
+        """(Re)build the per-unit ready cache for a fresh run.
+
+        Topology (units/consumers) is computed once and reused; the cached
+        ready cycles and the per-stream unit heap are rebuilt because
+        arrivals may have accumulated in a previous run.
+        """
+        self._ensure_units()
+        ur: list[Optional[int]] = []
+        heap: list[tuple[int, int]] = []
+        for i in range(len(self._units)):
+            c = self._unit_next(i)
+            ur.append(c)
+            if c is not None:
+                heap.append((c, i))
+        heapq.heapify(heap)
+        self._unit_ready = ur
+        self._uheap = heap
+        self._ready_list = []
+        self._ready_set = set()
+
+    def ready_units(self, t: int) -> list[int]:
+        """Unit indices ready at cycle ``t``, in unit (arbitration) order.
+
+        Readiness for a fixed beat is monotone in t, so once a unit drains
+        off the heap into the ready list it stays there until it advances.
+        Stale heap entries (superseded by an earlier recomputed cycle) are
+        dropped lazily on pop.
+        """
+        heap = self._uheap
+        ur = self._unit_ready
+        while heap and heap[0][0] <= t:
+            c, i = heapq.heappop(heap)
+            if ur[i] == c and i not in self._ready_set:
+                bisect.insort(self._ready_list, i)
+                self._ready_set.add(i)
+        return self._ready_list
+
+    def advance_unit(self, i: int, t: int) -> None:
+        """Advance unit ``i`` at cycle ``t`` and re-derive readiness for it
+        and its dirty set (downstream consumer units only).
+
+        Equivalent to ``advance(self._units[i], t)`` but appends through
+        the compiled arrival-list references (no Edge hashing)."""
+        self.ready_hint = None
+        for rec in self._uinfo[i]:
+            rec[0].append(t)
+        if self.done_cycle is None and self._unit_has_final[i]:
+            nb = self.n_beats
+            if all(len(a) >= nb for a in self._final_arrs):
+                self.done_cycle = t
+        if i in self._ready_set:
+            self._ready_set.remove(i)
+            self._ready_list.remove(i)
+        c = self._unit_next(i)
+        self._unit_ready[i] = c
+        if c is not None:
+            heapq.heappush(self._uheap, (c, i))
+        for j in self._unit_consumers[i]:
+            # A consumer with a cached numeric cycle already had all
+            # prereqs for its current beat; the new arrival belongs to a
+            # later beat and cannot move it.  Only blocked consumers can
+            # become ready.
+            if self._unit_ready[j] is None:
+                cj = self._unit_next(j)
+                if cj is not None:
+                    self._unit_ready[j] = cj
+                    heapq.heappush(self._uheap, (cj, j))
+
+    def next_ready(self) -> Optional[int]:
+        """Incremental mirror of :meth:`next_ready_cycle`: min over the
+        drained ready list and the (lazily validated) unit-heap top."""
+        best: Optional[int] = None
+        ur = self._unit_ready
+        for i in self._ready_list:
+            c = ur[i]
+            if best is None or c < best:
+                best = c
+        heap = self._uheap
+        while heap:
+            c, i = heap[0]
+            if ur[i] != c or i in self._ready_set:
+                heapq.heappop(heap)
+                continue
+            if best is None or c < best:
+                best = c
+            break
+        return best
+
+    def gate_released(self) -> None:
+        """A gate stream completed: re-derive readiness of blocked units.
+
+        Called by the engines when the *last* gate drains (before that,
+        units recompute to None anyway, so calling early is harmless)."""
+        self.ready_hint = None
+        if not self._unit_ready:
+            return  # heap cache not built (cycle/event engine) — nothing cached
+        for i, c in enumerate(self._unit_ready):
+            if c is None:
+                ci = self._unit_next(i)
+                if ci is not None:
+                    self._unit_ready[i] = ci
+                    heapq.heappush(self._uheap, (ci, i))
+
+    # -- diagnostics -------------------------------------------------------
+
+    def stall_report(self) -> str:
+        """One-line description of why this stream cannot advance: frontier
+        beats of its final edges plus the first few blocking conditions."""
+        self._ensure_units()
+        front = ", ".join(
+            f"{tuple(e[0])}->{tuple(e[1])}@{self._crossed(e)}/{self.n_beats}"
+            for e in self.finals[:3]
+        )
+        if self.gates and self._t0() is None:
+            pend = sum(1 for g in self.gates if g.done_cycle is None)
+            return f"finals [{front}] gated on {pend} unfinished upstream stream(s)"
+        reasons = []
+        for i, u in enumerate(self._units):
+            if self._unit_next(i) is not None:
+                continue
+            b = len(self.arrivals.get(u[0], ()))
+            if b >= self.n_beats:
+                continue
+            if len(u) > 1 and any(
+                len(self.arrivals.get(e, ())) != b for e in u
+            ):
+                reasons.append(f"fork group {[tuple(e[1]) for e in u]} desynchronized")
+                continue
+            for e in u:
+                for up in self.prereqs.get(e, ()):
+                    arr = self.arrivals.get(up, ())
+                    if len(arr) <= b:
+                        reasons.append(
+                            f"edge {tuple(e[0])}->{tuple(e[1])} beat {b} awaits "
+                            f"upstream {tuple(up[0])}->{tuple(up[1])} "
+                            f"({len(arr)} arrived)"
+                        )
+                        break
+                else:
+                    continue
+                break
+            if len(reasons) >= 3:
+                break
+        why = "; ".join(reasons) if reasons else "no blocked edge found"
+        return f"finals [{front}]: {why}"
 
 
 def _chain(edges: list[Edge]) -> tuple[dict[Edge, list[Edge]], list[list[Edge]]]:
@@ -342,17 +650,26 @@ class NoCSim:
 
     # -- engine -------------------------------------------------------------
 
-    def run(self, max_cycles: int = 2_000_000, engine: str = "event") -> int:
+    def run(self, max_cycles: int = 2_000_000, engine: str = "heap") -> int:
         """Advance until all streams complete; returns the last done cycle.
 
-        ``engine='event'`` (default) fast-forwards idle gaps and is
-        bit-identical to ``engine='cycle'``, the legacy
-        one-iteration-per-cycle loop kept for equivalence testing.
+        ``engine='heap'`` (default) schedules pending streams in a global
+        min-heap keyed on exact next-ready cycle with incremental per-unit
+        readiness — the fast path for large meshes.  ``engine='event'``
+        fast-forwards idle gaps but still scans every pending stream per
+        active cycle; ``engine='cycle'`` is the legacy
+        one-iteration-per-cycle loop.  All three are bit-identical (same
+        per-stream arrivals, completion cycles and arbitration counter).
         """
+        if engine == "heap":
+            return run_heap(self, max_cycles)
         if engine == "event":
             return run_event_driven(self, max_cycles)
         if engine != "cycle":
             raise ValueError(f"unknown engine {engine!r}")
+        from repro.core.noc.engine import gate_dependents, stuck_error
+
+        dependents = gate_dependents(self.streams)
         t = 0
         while t < max_cycles:
             pending = [s for s in self.streams if s.done_cycle is None]
@@ -369,16 +686,17 @@ class NoCSim:
                     busy.update(links)
                     s.advance(group, t)
                     progressed = True
+                if s.done_cycle is not None:
+                    for dep in dependents.get(id(s), ()):
+                        dep.gate_released()
             if not progressed and all(
                 s.next_ready_cycle() is None for s in pending
             ):
-                raise RuntimeError(
-                    f"netsim deadlock at cycle {t}: no pending stream can ever advance"
-                )
+                raise stuck_error(self, "deadlock", t, pending)
             t += 1
         unfinished = [s for s in self.streams if s.done_cycle is None]
         if unfinished:
-            raise RuntimeError(f"netsim deadlock/timeout at cycle {t}")
+            raise stuck_error(self, "deadlock/timeout", t, unfinished)
         if not self.streams:
             return 0
         return max(s.done_cycle for s in self.streams)

@@ -3,8 +3,9 @@
 The standard NoC evaluation methodology (cf. Guirado et al., Tiwari et
 al. in PAPERS.md): inject a synthetic pattern at increasing rates and
 report the latency curve up to and past saturation.  Feasible only with
-the event-driven engine — a 16x16 mesh at low injection rates is >95%
-idle cycles under the per-cycle loop.
+the fast engines — a 16x16 mesh at low injection rates is >95% idle
+cycles under the per-cycle loop; the heap engine plus the ``workers=N``
+process-pool fan-out makes even 64x64 curves a seconds-scale run.
 
 Because :func:`~.patterns.synthetic_trace` draws destinations and
 unit-rate gaps once per seed and only rescales gaps with the rate, every
@@ -49,7 +50,7 @@ def measure(
     mesh: Mesh2D,
     cfg: SyntheticConfig,
     params: NoCParams | None = None,
-    engine: str = "event",
+    engine: str = "heap",
 ) -> SweepPoint:
     """Replay one synthetic workload and aggregate its stream metrics."""
     p = params or NoCParams()
@@ -67,6 +68,12 @@ def measure(
     )
 
 
+def _measure_task(args: tuple) -> SweepPoint:
+    """Top-level process-pool entry point (must be picklable)."""
+    mesh, cfg, params, engine = args
+    return measure(mesh, cfg, params=params, engine=engine)
+
+
 def saturation_sweep(
     mesh: Mesh2D,
     pattern: str,
@@ -75,18 +82,41 @@ def saturation_sweep(
     packets_per_node: int = 4,
     seed: int = 0,
     params: NoCParams | None = None,
-    engine: str = "event",
+    engine: str = "heap",
+    workers: int | None = None,
     **pattern_kw,
 ) -> list[SweepPoint]:
-    """Latency/throughput curve over ``rates`` for one pattern + seed."""
-    out = []
-    for rate in rates:
-        cfg = SyntheticConfig(
+    """Latency/throughput curve over ``rates`` for one pattern + seed.
+
+    Sweep points are independent replays of the same seeded packet
+    population, so ``workers > 1`` fans them out over a process pool
+    (chunked to one submission per worker); results come back in rate
+    order and are identical to a serial run.  This is what makes 64x64
+    curves a seconds-scale operation.  Falls back to serial execution if
+    the platform cannot spawn processes.
+    """
+    cfgs = [
+        SyntheticConfig(
             pattern=pattern, rate=rate, nbytes=nbytes,
             packets_per_node=packets_per_node, seed=seed, **pattern_kw,
         )
-        out.append(measure(mesh, cfg, params=params, engine=engine))
-    return out
+        for rate in rates
+    ]
+    if workers and workers > 1 and len(cfgs) > 1:
+        import concurrent.futures
+
+        tasks = [(mesh, cfg, params, engine) for cfg in cfgs]
+        nproc = min(workers, len(tasks))
+        try:
+            with concurrent.futures.ProcessPoolExecutor(max_workers=nproc) as ex:
+                return list(
+                    ex.map(_measure_task, tasks,
+                           chunksize=max(1, len(tasks) // nproc))
+                )
+        except (OSError, PermissionError, ImportError, NotImplementedError,
+                concurrent.futures.process.BrokenProcessPool):
+            pass  # sandboxed/fork-less/wasm platform: fall through to serial
+    return [measure(mesh, cfg, params=params, engine=engine) for cfg in cfgs]
 
 
 def saturation_rate(points: Sequence[SweepPoint], knee: float = 3.0) -> float:

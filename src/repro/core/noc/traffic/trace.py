@@ -20,7 +20,11 @@ Replaying a trace through :func:`replay` runs all phase-concurrent
 streams over the *shared* link fabric, so the resulting completion cycles
 include interference — unlike summing per-collective idle-network model
 times, which is what the paper's microbenchmarks (and the analytical
-models in ``noc/model.py``) report.
+models in ``noc/model.py``) report.  Two phase-composition modes exist:
+the default ``mode='barrier'`` fully serializes phases on fabric drain +
+barrier cost, while ``mode='window'`` overlaps them (phase k+1 streams
+inject as soon as the phase-k streams they share tiles with drain —
+double-buffered SUMMA semantics, no global barrier).
 """
 
 from __future__ import annotations
@@ -198,18 +202,59 @@ class ReplayResult:
         return max(self.latencies, default=0.0)
 
 
+def _event_nodes(ev: TrafficEvent, mesh: Mesh2D) -> frozenset:
+    """Tiles an event touches (sources, destinations, multicast leaves)."""
+    nodes = set()
+    if ev.src is not None:
+        nodes.add(ev.src)
+    if ev.kind == "multicast":
+        ma = MultiAddress(Coord(*ev.dst), ev.x_mask, ev.y_mask)
+        nodes.update(tuple(c) for c in ma.destinations(mesh))
+    elif ev.dst is not None:
+        nodes.add(ev.dst)
+    nodes.update(ev.sources)
+    return frozenset(nodes)
+
+
+def _add_event(sim: NoCSim, ev: TrafficEvent, start: float):
+    if ev.kind == "unicast":
+        return sim.add_unicast(Coord(*ev.src), Coord(*ev.dst), ev.nbytes, start=start)
+    if ev.kind == "multicast":
+        ma = MultiAddress(Coord(*ev.dst), ev.x_mask, ev.y_mask)
+        return sim.add_multicast(Coord(*ev.src), ma, ev.nbytes, start=start)
+    if ev.kind == "reduction":
+        return sim.add_reduction(
+            [Coord(*s) for s in ev.sources], Coord(*ev.dst), ev.nbytes, start=start
+        )
+    raise ValueError(f"unknown event kind {ev.kind!r}")
+
+
 def replay(
     trace: Trace,
     params: NoCParams | None = None,
     max_cycles: int = 50_000_000,
-    engine: str = "event",
+    engine: str = "heap",
+    mode: str = "barrier",
 ) -> ReplayResult:
     """Run a trace through the simulator under shared-fabric contention.
 
-    Phase k+1 starts only after phase k's streams have drained (plus the
-    HW-barrier cost when the phase ends with a barrier event), so the
-    result composes end-to-end workload time *with* interference.
+    ``mode='barrier'`` (default): phase k+1 starts only after *all* of
+    phase k's streams have drained (plus the HW-barrier cost when the
+    phase ends with a barrier event), so the result composes end-to-end
+    workload time *with* interference.
+
+    ``mode='window'``: sliding-window replay — each phase-k+1 stream is
+    gated only on the phase-k streams whose tile sets overlap its own,
+    and injects as soon as those drain (no global barrier serialization).
+    This models double-buffered SUMMA, where iteration k+1's collectives
+    start per-row/column as soon as the previous iteration's traffic has
+    freed the tiles, and yields a makespan between the fully-serialized
+    barrier replay and the uncontended single-phase lower bound.
     """
+    if mode == "window":
+        return _replay_window(trace, params, max_cycles, engine)
+    if mode != "barrier":
+        raise ValueError(f"unknown replay mode {mode!r}")
     p = params or NoCParams()
     sim = NoCSim(trace.mesh, p)
     results: list[StreamResult] = []
@@ -222,28 +267,15 @@ def replay(
         added: list[tuple[TrafficEvent, object, float]] = []
         barrier_cost = 0.0
         for ev in by_phase.get(phase, ()):
-            start = offset + ev.start
-            if ev.kind == "unicast":
-                st = sim.add_unicast(
-                    Coord(*ev.src), Coord(*ev.dst), ev.nbytes, start=start
-                )
-            elif ev.kind == "multicast":
-                ma = MultiAddress(Coord(*ev.dst), ev.x_mask, ev.y_mask)
-                st = sim.add_multicast(Coord(*ev.src), ma, ev.nbytes, start=start)
-            elif ev.kind == "reduction":
-                st = sim.add_reduction(
-                    [Coord(*s) for s in ev.sources], Coord(*ev.dst),
-                    ev.nbytes, start=start,
-                )
-            elif ev.kind == "barrier":
+            if ev.kind == "barrier":
                 # The barrier's own fabric cost is the analytical model of
                 # its recorded flavor (its reduction would wipe sim state if
                 # simulated inline); it serializes the phase boundary.
                 fn = p.barrier_sw if ev.flavor == "sw" else p.barrier_hw
                 barrier_cost = max(barrier_cost, fn(len(ev.sources)))
                 continue
-            else:  # pragma: no cover - kinds validated at parse time
-                raise ValueError(f"unknown event kind {ev.kind!r}")
+            start = offset + ev.start
+            st = _add_event(sim, ev, start)
             added.append((ev, st, start))
         done = sim.run(max_cycles=max_cycles, engine=engine)
         for ev, st, start in added:
@@ -253,5 +285,72 @@ def replay(
         # alone would rewind it to the last stream completion.
         offset = max(offset, done) + barrier_cost
         phase_end.append(offset)
+    makespan = max((r.done_cycle for r in results), default=0)
+    return ReplayResult(makespan=makespan, streams=results, phase_end=phase_end)
+
+
+def _replay_window(
+    trace: Trace,
+    params: NoCParams | None,
+    max_cycles: int,
+    engine: str,
+) -> ReplayResult:
+    """Sliding-window replay: one simulation run, cross-phase gating.
+
+    Every non-barrier event becomes a stream up front; each stream
+    carries ``gates`` referencing, per tile it touches, the *most recent*
+    earlier-phase stream that touched that tile, so it injects (at its
+    own intra-phase ``start`` offset) the cycle after the last of those
+    drains.  Tracking the latest toucher — not just the immediately
+    preceding phase — keeps the dependency chain transitive: a phase
+    whose tile set is disjoint from its neighbor cannot let phase k+2
+    overtake still-in-flight phase-k traffic on the same tiles.  Streams
+    of the same phase stay concurrent (they gate on earlier phases only).
+    Barrier events are dropped — the window model is exactly "no global
+    barrier, per-tile double-buffered handoff".  All phases share one
+    ``run()``, so cross-phase contention in the overlap window is fully
+    modeled.
+    """
+    p = params or NoCParams()
+    mesh = trace.mesh
+    sim = NoCSim(mesh, p)
+    added: list[tuple[TrafficEvent, object]] = []
+    # tile -> ALL streams of the most recent phase that touched it (a row
+    # multicast and a column reduction of one phase legitimately share a
+    # tile; a later stream must wait for every one of them).
+    last_touch: dict[tuple, list] = {}
+    by_phase: dict[int, list[TrafficEvent]] = {}
+    for ev in trace.events:
+        by_phase.setdefault(ev.phase, []).append(ev)
+    for phase in range(trace.num_phases):
+        cur: list[tuple[frozenset, object]] = []
+        for ev in by_phase.get(phase, ()):
+            if ev.kind == "barrier":
+                continue
+            st = _add_event(sim, ev, ev.start)
+            nodes = _event_nodes(ev, mesh)
+            gates = {}
+            for node in nodes:
+                for g in last_touch.get(node, ()):
+                    gates[id(g)] = g
+            st.gates = list(gates.values())
+            added.append((ev, st))
+            cur.append((nodes, st))
+        cur_touch: dict[tuple, list] = {}
+        for nodes, st in cur:  # same-phase streams do not gate each other
+            for node in nodes:
+                cur_touch.setdefault(node, []).append(st)
+        last_touch.update(cur_touch)
+    sim.run(max_cycles=max_cycles, engine=engine)
+    results = []
+    for ev, st in added:
+        t0 = st._t0() or 0  # gates all drained after a successful run
+        results.append(StreamResult(ev, t0 + ev.start, st.done_cycle))
+    n_phases = trace.num_phases
+    phase_end: list[float] = [0.0] * max(n_phases, 0)
+    for ev, st in added:
+        phase_end[ev.phase] = max(phase_end[ev.phase], st.done_cycle)
+    for k in range(1, n_phases):  # drain times are cumulative across windows
+        phase_end[k] = max(phase_end[k], phase_end[k - 1])
     makespan = max((r.done_cycle for r in results), default=0)
     return ReplayResult(makespan=makespan, streams=results, phase_end=phase_end)

@@ -21,6 +21,7 @@ collective groups are mask-encodable.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable, Sequence
 
@@ -78,20 +79,11 @@ class Mesh2D:
         return Coord(node_id // self.rows, node_id % self.rows)
 
     def xy_route(self, src: Coord, dst: Coord) -> list[Coord]:
-        """Dimension-ordered route: X first, then Y. Includes endpoints."""
-        if not (self.contains(src) and self.contains(dst)):
-            raise ValueError(f"route endpoints outside mesh: {src}->{dst}")
-        path = [src]
-        x, y = src.x, src.y
-        step = 1 if dst.x > x else -1
-        while x != dst.x:
-            x += step
-            path.append(Coord(x, y))
-        step = 1 if dst.y > y else -1
-        while y != dst.y:
-            y += step
-            path.append(Coord(x, y))
-        return path
+        """Dimension-ordered route: X first, then Y. Includes endpoints.
+
+        Memoized on (mesh, src, dst) — storm construction re-routes the
+        same row/column segments for every stream of every phase."""
+        return list(_xy_route_cached(self, src, dst))
 
     def hops(self, src: Coord, dst: Coord) -> int:
         return abs(src.x - dst.x) + abs(src.y - dst.y)
@@ -127,6 +119,23 @@ class MultiAddress:
         return ((c.x ^ self.dst.x) & ~self.x_mask) == 0 and (
             (c.y ^ self.dst.y) & ~self.y_mask
         ) == 0
+
+
+@functools.lru_cache(maxsize=65536)
+def _xy_route_cached(mesh: Mesh2D, src: Coord, dst: Coord) -> tuple[Coord, ...]:
+    if not (mesh.contains(src) and mesh.contains(dst)):
+        raise ValueError(f"route endpoints outside mesh: {src}->{dst}")
+    path = [src]
+    x, y = src.x, src.y
+    step = 1 if dst.x > x else -1
+    while x != dst.x:
+        x += step
+        path.append(Coord(x, y))
+    step = 1 if dst.y > y else -1
+    while y != dst.y:
+        y += step
+        path.append(Coord(x, y))
+    return tuple(path)
 
 
 def _expand(base: int, mask: int, limit: int) -> list[int]:
@@ -273,8 +282,21 @@ def multicast_fork_tree(
     XY multicast routing: the packet travels along the source row forking a
     copy down/up every destination column (matching the extended
     ``xy_route_fork`` of Section 3.1.2).
-    """
 
+    Memoized on ``(mesh, src, maddr)``: collective storms re-issue the
+    same row/column multicast per phase, and rebuilding the tree per
+    stream dominated storm construction.  The expensive route walk is
+    cached; each call returns a fresh shallow copy so caller mutation
+    cannot poison the cache.
+    """
+    cached = _multicast_fork_tree_cached(mesh, src, maddr)
+    return {k: set(v) for k, v in cached.items()}
+
+
+@functools.lru_cache(maxsize=4096)
+def _multicast_fork_tree_cached(
+    mesh: Mesh2D, src: Coord, maddr: MultiAddress
+) -> dict[Coord, set[Coord]]:
     dests = maddr.destinations(mesh)
     fork: dict[Coord, set[Coord]] = {}
 
@@ -306,8 +328,20 @@ def reduction_join_tree(
     the reflection of the multicast fork tree; returns
     ``{router: set(inputs feeding it)}`` where inputs are neighbouring
     routers or the router itself (local contribution).
-    """
 
+    Memoized on ``(mesh, sources, dst)`` (sources order-sensitive, as the
+    tree is order-independent anyway).  The expensive route walk is
+    cached; each call returns a fresh shallow copy so caller mutation
+    cannot poison the cache.
+    """
+    cached = _reduction_join_tree_cached(mesh, tuple(sources), dst)
+    return {k: set(v) for k, v in cached.items()}
+
+
+@functools.lru_cache(maxsize=4096)
+def _reduction_join_tree_cached(
+    mesh: Mesh2D, sources: tuple[Coord, ...], dst: Coord
+) -> dict[Coord, set[Coord]]:
     join: dict[Coord, set[Coord]] = {}
 
     def add(a: Coord, b: Coord):

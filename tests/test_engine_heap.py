@@ -1,0 +1,342 @@
+"""Heap-scheduled engine: equivalence, window replay, diagnostics, exact math.
+
+The heap engine must be *bit-identical* to the per-cycle reference loop —
+same per-stream completion cycles, same arrival histories, same
+round-robin arbitration counter — while only ever touching the streams
+whose exact next-ready threshold has been reached.  These tests stress
+that equivalence on randomized mixed storms (a deterministic mirror of
+the hypothesis suite in ``test_engine_properties.py``), and cover the
+satellites that ride on the fast engine: sliding-window replay, stall
+diagnostics, Fraction-exact beat arithmetic, memoized topology trees and
+the parallel sweep runner.
+"""
+
+import random
+import time
+from fractions import Fraction
+
+import pytest
+
+from repro.core.noc.netsim import NoCSim, _StreamState
+from repro.core.noc.params import NoCParams
+from repro.core.noc.traffic import (
+    SyntheticConfig,
+    Trace,
+    TrafficEvent,
+    collective_storm,
+    replay,
+    saturation_sweep,
+    summa_storm,
+    synthetic_trace,
+)
+from repro.core.topology import (
+    Coord,
+    Mesh2D,
+    Submesh,
+    multicast_fork_tree,
+    reduction_join_tree,
+)
+
+P = NoCParams()
+ENGINES = ("cycle", "event", "heap")
+
+
+# ---------------------------------------------------------------------------
+# Randomized mixed-storm equivalence (deterministic seeds)
+# ---------------------------------------------------------------------------
+
+
+def _random_storm(sim: NoCSim, seed: int) -> None:
+    """Random mix of unicasts/multicasts/reductions with fractional starts."""
+    rng = random.Random(seed)
+    mesh = sim.mesh
+    for _ in range(rng.randrange(2, 12)):
+        kind = rng.choice(["u", "m", "r"])
+        start = rng.choice([0.0, 3.0, 17.5, 120.0]) + rng.random() * rng.choice(
+            [0, 1, 40]
+        )
+        nbytes = rng.choice([64, 256, 1024, 4096])
+        if kind == "u":
+            a = Coord(rng.randrange(mesh.cols), rng.randrange(mesh.rows))
+            b = Coord(rng.randrange(mesh.cols), rng.randrange(mesh.rows))
+            if a != b:
+                sim.add_unicast(a, b, nbytes, start=start)
+        elif kind == "m":
+            w, h = rng.choice([1, 2, 4]), rng.choice([1, 2, 4])
+            x = rng.randrange(0, mesh.cols, w)
+            y = rng.randrange(0, mesh.rows, h)
+            src = Coord(rng.randrange(mesh.cols), rng.randrange(mesh.rows))
+            sim.add_multicast(
+                src, Submesh(x, y, w, h).multi_address(), nbytes, start=start
+            )
+        else:
+            k = rng.randrange(2, 8)
+            srcs = list({
+                Coord(rng.randrange(mesh.cols), rng.randrange(mesh.rows))
+                for _ in range(k)
+            })
+            dst = Coord(rng.randrange(mesh.cols), rng.randrange(mesh.rows))
+            sim.add_reduction(srcs, dst, nbytes, start=start)
+
+
+def _run_fingerprint(mesh: Mesh2D, seed: int, engine: str):
+    sim = NoCSim(Mesh2D(mesh.cols, mesh.rows), P)
+    _random_storm(sim, seed)
+    makespan = sim.run(engine=engine)
+    return (
+        makespan,
+        sim._rr,
+        [s.done_cycle for s in sim.streams],
+        [s.arrivals for s in sim.streams],
+    )
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_engines_identical_on_randomized_mixed_storms(seed):
+    mesh = Mesh2D(random.Random(seed).choice([4, 8]), 4)
+    ref = _run_fingerprint(mesh, seed, "cycle")
+    for engine in ("event", "heap"):
+        assert _run_fingerprint(mesh, seed, engine) == ref, engine
+
+
+def test_engines_identical_on_16x16_storm_replay():
+    trace = collective_storm(Mesh2D(16, 16), tile_bytes=1024, phases=2)
+    ref = replay(trace, params=P, engine="event")
+    got = replay(trace, params=P, engine="heap")
+    assert [s.done_cycle for s in got.streams] == [s.done_cycle for s in ref.streams]
+    assert got.makespan == ref.makespan
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window replay
+# ---------------------------------------------------------------------------
+
+
+def _phase_solo_makespan(trace: Trace, phase: int) -> int:
+    """Uncontended replay of one phase alone (rebased to phase 0)."""
+    import dataclasses
+
+    solo = Trace(trace.cols, trace.rows, [
+        dataclasses.replace(e, phase=0)
+        for e in trace.events
+        if e.phase == phase and e.kind != "barrier"
+    ])
+    return replay(solo, params=P).makespan
+
+
+def test_window_replay_between_barrier_and_uncontended_bound():
+    trace = summa_storm(Mesh2D(4, 4), tile_bytes=2048, iters=3)
+    barrier = replay(trace, params=P)
+    window = replay(trace, params=P, mode="window")
+    # <= fully-serialized phase-barrier replay (and strictly better here:
+    # double-buffered SUMMA overlaps iteration k+1 with iteration k drain)
+    assert window.makespan < barrier.makespan
+    # >= the uncontended lower bound: no phase alone can beat it, and the
+    # gated chain still serializes each row's successive multicasts.
+    lb = max(_phase_solo_makespan(trace, k) for k in range(trace.num_phases))
+    assert window.makespan >= lb
+    assert window.phase_end == sorted(window.phase_end)
+    assert len(window.streams) == len(barrier.streams)
+
+
+def test_window_replay_engine_equivalence():
+    trace = summa_storm(Mesh2D(4, 4), tile_bytes=1024, iters=2)
+    ref = replay(trace, params=P, mode="window", engine="cycle")
+    for engine in ("event", "heap"):
+        got = replay(trace, params=P, mode="window", engine=engine)
+        assert [s.done_cycle for s in got.streams] == \
+               [s.done_cycle for s in ref.streams], engine
+
+
+def test_window_gating_starts_after_overlapping_stream_drains():
+    """Two same-row unicasts in consecutive phases: phase 1 must inject
+    only after phase 0 drains; a disjoint-row stream is not gated."""
+    tr = Trace(4, 4, [
+        TrafficEvent("unicast", phase=0, nbytes=1024, src=(0, 0), dst=(3, 0)),
+        TrafficEvent("unicast", phase=1, nbytes=1024, src=(0, 0), dst=(3, 0)),
+        TrafficEvent("unicast", phase=1, nbytes=1024, src=(0, 3), dst=(3, 3)),
+    ])
+    res = replay(tr, params=P, mode="window")
+    first, gated, free = res.streams
+    assert gated.inject_cycle == first.done_cycle + 1
+    assert free.inject_cycle == 0.0
+    assert gated.done_cycle > first.done_cycle
+    # ungated stream finishes like a solo run — long before the gated one
+    assert free.done_cycle < gated.done_cycle
+
+
+def test_window_gating_is_transitive_across_disjoint_phases():
+    """A middle phase on disjoint tiles must not break the chain: phase 2
+    on row 0 still gates on the (slow) phase-0 row-0 stream, keeping at
+    most one outstanding iteration per tile (double-buffered depth)."""
+    tr = Trace(4, 4, [
+        TrafficEvent("unicast", phase=0, nbytes=65536, src=(0, 0), dst=(3, 0)),
+        TrafficEvent("unicast", phase=1, nbytes=64, src=(0, 3), dst=(3, 3)),
+        TrafficEvent("unicast", phase=2, nbytes=64, src=(0, 0), dst=(3, 0)),
+    ])
+    res = replay(tr, params=P, mode="window")
+    slow, middle, chained = res.streams
+    assert chained.inject_cycle == slow.done_cycle + 1
+    assert chained.done_cycle > slow.done_cycle
+    assert middle.done_cycle < slow.done_cycle  # disjoint row truly overlaps
+
+
+def test_window_gates_on_every_same_phase_toucher_of_a_tile():
+    """Two phase-0 streams share tile (3,0); a phase-1 stream touching it
+    must wait for BOTH (the slow one included), not just the last-added."""
+    tr = Trace(4, 4, [
+        TrafficEvent("unicast", phase=0, nbytes=65536, src=(0, 0), dst=(3, 0)),
+        TrafficEvent("unicast", phase=0, nbytes=64, src=(3, 1), dst=(3, 0)),
+        TrafficEvent("unicast", phase=1, nbytes=64, src=(3, 0), dst=(3, 3)),
+    ])
+    res = replay(tr, params=P, mode="window")
+    slow, tiny, chained = res.streams
+    assert chained.inject_cycle == max(slow.done_cycle, tiny.done_cycle) + 1
+    assert chained.done_cycle > slow.done_cycle
+
+
+def test_window_replay_rejects_unknown_mode():
+    tr = Trace(2, 2, [TrafficEvent("unicast", nbytes=64, src=(0, 0), dst=(1, 0))])
+    with pytest.raises(ValueError, match="mode"):
+        replay(tr, params=P, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Stall diagnostics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_deadlock_error_names_stuck_streams_and_edges(engine):
+    sim = NoCSim(Mesh2D(2, 2), P)
+    e_up = (Coord(0, 0), Coord(1, 0))
+    e_dn = (Coord(1, 0), Coord(1, 1))
+    sim.streams.append(_StreamState(
+        n_beats=1, prereqs={e_dn: [e_up]}, groups=[[e_dn]],
+        rate={}, inject={}, finals=[e_dn]))
+    with pytest.raises(RuntimeError) as exc:
+        sim.run(engine=engine)
+    msg = str(exc.value)
+    assert "deadlock" in msg
+    assert "stream#0" in msg          # which stream is stuck
+    assert "awaits" in msg            # why: the missing upstream edge
+    assert "(0, 0)" in msg and "(1, 0)" in msg
+    assert "0/1" in msg               # frontier beat of the final edge
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_timeout_error_reports_frontier_beats(engine):
+    sim = NoCSim(Mesh2D(4, 1), P)
+    sim.add_unicast(Coord(0, 0), Coord(3, 0), nbytes=4096)
+    with pytest.raises(RuntimeError) as exc:
+        sim.run(max_cycles=10, engine=engine)
+    msg = str(exc.value)
+    assert "deadlock/timeout" in msg
+    assert "stream#0" in msg
+    assert f"/{P.beats(4096)}" in msg  # frontier beats out of total
+
+
+# ---------------------------------------------------------------------------
+# Exact (Fraction) beat arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_fractional_rates_no_ulp_drift_between_engines():
+    """A long stream with inject rate 4/3 must never drift readiness by an
+    ulp: beat b fires at exactly ceil(1/10 + 4b/3) in every engine (float
+    accumulation of ``start + b * rate`` breaks this after enough beats)."""
+    import math
+
+    e = (Coord(0, 0), Coord(0, 0))
+    results = []
+    for engine in ENGINES:
+        sim = NoCSim(Mesh2D(1, 1), P)
+        sim.streams.append(_StreamState(
+            n_beats=900, prereqs={e: []}, groups=[[e]],
+            rate={}, inject={e: (Fraction(1, 10), Fraction(4, 3))},
+            finals=[e]))
+        sim.run(engine=engine)
+        results.append(sim.streams[0].arrivals[e])
+    assert results[0] == results[1] == results[2]
+    assert results[0] == [
+        math.ceil(Fraction(1, 10) + b * Fraction(4, 3)) for b in range(900)
+    ]
+
+
+def test_float_inputs_convert_exactly():
+    st = _StreamState(
+        n_beats=4, prereqs={}, groups=[],
+        rate={(Coord(0, 0), Coord(1, 0)): 2.0},
+        inject={(Coord(0, 0), Coord(0, 0)): (50.5, 1.0)}, finals=[])
+    assert st.rate[(Coord(0, 0), Coord(1, 0))] == Fraction(2)
+    assert st.inject[(Coord(0, 0), Coord(0, 0))] == (Fraction(101, 2), Fraction(1))
+
+
+# ---------------------------------------------------------------------------
+# Memoized topology trees
+# ---------------------------------------------------------------------------
+
+
+def test_fork_and_join_trees_are_memoized_and_mutation_safe():
+    from repro.core.topology import (
+        _multicast_fork_tree_cached,
+        _reduction_join_tree_cached,
+    )
+
+    mesh = Mesh2D(8, 8)
+    ma = Submesh(0, 0, 8, 1).multi_address()
+    h0 = _multicast_fork_tree_cached.cache_info().hits
+    a = multicast_fork_tree(mesh, Coord(0, 0), ma)
+    b = multicast_fork_tree(mesh, Coord(0, 0), ma)
+    assert _multicast_fork_tree_cached.cache_info().hits > h0  # no rebuild
+    assert a == b
+    # callers get fresh copies: mutating one cannot poison the cache
+    a[Coord(0, 0)].add(Coord(7, 7))
+    assert multicast_fork_tree(mesh, Coord(0, 0), ma) == b
+    srcs = [Coord(x, 0) for x in range(4)]
+    j0 = _reduction_join_tree_cached.cache_info().hits
+    ja = reduction_join_tree(mesh, srcs, Coord(0, 0))
+    jb = reduction_join_tree(mesh, list(srcs), Coord(0, 0))
+    assert _reduction_join_tree_cached.cache_info().hits > j0
+    assert ja == jb
+    ja.pop(Coord(0, 0))
+    assert reduction_join_tree(mesh, srcs, Coord(0, 0)) == jb
+    # routes too
+    assert mesh.xy_route(Coord(0, 0), Coord(5, 3)) == \
+           mesh.xy_route(Coord(0, 0), Coord(5, 3))
+
+
+def test_memoized_trees_do_not_leak_between_meshes():
+    ma4 = Submesh(0, 0, 4, 1).multi_address()
+    f4 = multicast_fork_tree(Mesh2D(4, 4), Coord(0, 0), ma4)
+    f8 = multicast_fork_tree(Mesh2D(8, 8), Coord(0, 0), ma4)
+    assert f4 == f8  # same submesh rooted at origin: same tree shape
+    ma8 = Submesh(0, 0, 8, 1).multi_address()
+    assert multicast_fork_tree(Mesh2D(8, 8), Coord(0, 0), ma8) != f4
+
+
+# ---------------------------------------------------------------------------
+# Parallel sweep runner
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_sweep_matches_serial():
+    mesh = Mesh2D(8, 8)
+    rates = (0.01, 0.05, 0.1)
+    serial = saturation_sweep(mesh, "uniform", rates, params=P)
+    par = saturation_sweep(mesh, "uniform", rates, params=P, workers=3)
+    assert par == serial
+
+
+def test_heap_engine_not_slower_than_event_on_storm():
+    """Wall-clock guard (generous 1.3x margin vs. the >=2x bench gate, to
+    stay robust on loaded CI machines)."""
+    trace = collective_storm(Mesh2D(16, 16), tile_bytes=2048, phases=2)
+    t0 = time.perf_counter()
+    r_heap = replay(trace, params=P, engine="heap")
+    t_heap = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_event = replay(trace, params=P, engine="event")
+    t_event = time.perf_counter() - t0
+    assert r_heap.makespan == r_event.makespan
+    assert t_heap < 1.3 * t_event, (t_heap, t_event)

@@ -1,0 +1,105 @@
+"""Property tests: heap/event/cycle engine equivalence on random storms.
+
+Hypothesis drives randomized mixed unicast/multicast/reduction storms and
+asserts the three engines produce identical per-stream completion cycles,
+arrival histories and arbitration counters, plus the window-replay
+ordering property (window <= barrier, window >= uncontended bound).
+A deterministic mirror of these cases lives in ``test_engine_heap.py``
+so the invariants stay covered where hypothesis is not installed.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.noc.netsim import NoCSim  # noqa: E402
+from repro.core.noc.params import NoCParams  # noqa: E402
+from repro.core.noc.traffic import replay, summa_storm  # noqa: E402
+from repro.core.topology import Coord, Mesh2D, Submesh  # noqa: E402
+
+P = NoCParams()
+
+_coord = st.tuples(st.integers(0, 3), st.integers(0, 3))
+_start = st.one_of(
+    st.just(0.0),
+    st.floats(0.0, 200.0, allow_nan=False, allow_infinity=False),
+)
+_nbytes = st.sampled_from([64, 256, 1024, 4096])
+
+_unicast = st.tuples(st.just("u"), _coord, _coord, _nbytes, _start)
+_multicast = st.tuples(
+    st.just("m"), _coord,
+    st.sampled_from([(0, 0, 4, 1), (0, 0, 4, 4), (0, 0, 2, 2), (2, 2, 2, 2)]),
+    _nbytes, _start,
+)
+_reduction = st.tuples(
+    st.just("r"),
+    st.lists(_coord, min_size=2, max_size=6, unique=True),
+    _coord, _nbytes, _start,
+)
+_ops = st.lists(
+    st.one_of(_unicast, _multicast, _reduction), min_size=1, max_size=10
+)
+
+
+def _build(sim: NoCSim, ops) -> None:
+    for op in ops:
+        if op[0] == "u":
+            _, a, b, nbytes, start = op
+            if a != b:
+                sim.add_unicast(Coord(*a), Coord(*b), nbytes, start=start)
+        elif op[0] == "m":
+            _, src, sub, nbytes, start = op
+            sim.add_multicast(
+                Coord(*src), Submesh(*sub).multi_address(), nbytes, start=start
+            )
+        else:
+            _, srcs, dst, nbytes, start = op
+            sim.add_reduction(
+                [Coord(*s) for s in srcs], Coord(*dst), nbytes, start=start
+            )
+
+
+def _fingerprint(ops, engine):
+    sim = NoCSim(Mesh2D(4, 4), P)
+    _build(sim, ops)
+    makespan = sim.run(engine=engine)
+    return (
+        makespan,
+        sim._rr,
+        [s.done_cycle for s in sim.streams],
+        [s.arrivals for s in sim.streams],
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=_ops)
+def test_heap_event_cycle_identical_on_random_storms(ops):
+    ref = _fingerprint(ops, "cycle")
+    assert _fingerprint(ops, "event") == ref
+    assert _fingerprint(ops, "heap") == ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    iters=st.integers(2, 4),
+    tile_bytes=st.sampled_from([512, 1024, 2048]),
+)
+def test_window_replay_bounded_by_barrier_replay(iters, tile_bytes):
+    trace = summa_storm(Mesh2D(4, 4), tile_bytes=tile_bytes, iters=iters)
+    barrier = replay(trace, params=P)
+    window = replay(trace, params=P, mode="window")
+    assert window.makespan <= barrier.makespan
+    # uncontended bound: even phase 0 alone (same population, no gates)
+    import dataclasses
+
+    from repro.core.noc.traffic import Trace
+
+    solo = Trace(trace.cols, trace.rows, [
+        dataclasses.replace(e, phase=0)
+        for e in trace.events
+        if e.phase == 0 and e.kind != "barrier"
+    ])
+    assert window.makespan >= replay(solo, params=P).makespan

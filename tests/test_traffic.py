@@ -173,14 +173,15 @@ def _netsim_cases():
     yield mesh, mixed
 
 
+@pytest.mark.parametrize("engine", ["event", "heap"])
 @pytest.mark.parametrize("case", range(13))
-def test_event_engine_bit_identical_to_cycle_loop(case):
+def test_fast_engines_bit_identical_to_cycle_loop(case, engine):
     mesh, build = list(_netsim_cases())[case]
     a, b = NoCSim(mesh, P), NoCSim(mesh, P)
     build(a)
     build(b)
     ta = a.run(engine="cycle")
-    tb = b.run(engine="event")
+    tb = b.run(engine=engine)
     assert ta == tb
     assert a._rr == b._rr  # arbitration counters stay in lockstep
     for sa, sb in zip(a.streams, b.streams):
@@ -188,26 +189,27 @@ def test_event_engine_bit_identical_to_cycle_loop(case):
         assert sa.arrivals == sb.arrivals
 
 
-def test_event_engine_bit_identical_on_synthetic_batch():
+def test_fast_engines_bit_identical_on_synthetic_batch():
     mesh = Mesh2D(4, 4)
     trace = synthetic_trace(mesh, SyntheticConfig(
         pattern="uniform", rate=0.05, seed=2, packets_per_node=3))
     r_cycle = replay(trace, params=P, engine="cycle")
-    r_event = replay(trace, params=P, engine="event")
-    assert [s.done_cycle for s in r_cycle.streams] == \
-           [s.done_cycle for s in r_event.streams]
+    for engine in ("event", "heap"):
+        r_fast = replay(trace, params=P, engine=engine)
+        assert [s.done_cycle for s in r_cycle.streams] == \
+               [s.done_cycle for s in r_fast.streams]
 
 
 def test_run_on_empty_stream_list_returns_zero():
     sim = NoCSim(Mesh2D(2, 2), P)
-    assert sim.run() == 0
-    assert sim.run(engine="cycle") == 0
+    for engine in ("heap", "event", "cycle"):
+        assert sim.run(engine=engine) == 0
 
 
 def test_deadlock_detected_early_not_at_timeout():
     """A stream whose only edge waits on an upstream that never arrives
     must raise promptly (livelock detection), not spin to max_cycles."""
-    for engine in ("event", "cycle"):
+    for engine in ("heap", "event", "cycle"):
         sim = NoCSim(Mesh2D(2, 2), P)
         e_up = (Coord(0, 0), Coord(1, 0))
         e_dn = (Coord(1, 0), Coord(1, 1))
