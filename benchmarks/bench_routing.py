@@ -1,0 +1,180 @@
+"""Routing-policy / virtual-channel saturation shoot-out.
+
+Sweeps the two adversarial synthetic patterns (hotspot, transpose)
+across the routing policies (XY / O1TURN / odd-even) and VC counts
+(1 / 2 / 4, packet-sliced) on 8x8 and 16x16 meshes, plus the
+mixed-class collective storm that isolates the head-of-line blocking
+VCs remove.  Emits ``BENCH_routing.json`` at the repo root with the
+saturation point of every configuration and the shift relative to XY —
+the trajectory to regress adaptive-routing work against.
+
+Run standalone as a CI gate::
+
+    PYTHONPATH=src python -m benchmarks.bench_routing --smoke
+
+exits non-zero if O1TURN saturates no later than XY on the 8x8
+transpose sweep, or if the mixed-class storm fails to complete strictly
+earlier with 2 VCs than with 1.
+
+Rate grids are per (pattern, mesh): the hotspot knee scales inversely
+with tile count (all hotspot traffic funnels into at most two links at
+the hotspot), while transpose is bisection-limited; each grid starts
+with a genuinely idle rate so the knee detector has a zero-load anchor.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from pathlib import Path
+
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.noc.traffic import (
+    compare_policies,
+    mixed_storm,
+    replay,
+    saturation_shifts,
+)
+from repro.core.topology import Mesh2D
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_routing.json"
+
+POLICIES = ("xy", "o1turn", "oddeven")
+VCS = (1, 2, 4)
+
+# (pattern, mesh side) -> (rates, packets_per_node, pattern kwargs)
+SWEEPS = {
+    ("hotspot", 8): ((0.004, 0.008, 0.013, 0.02, 0.03, 0.045), 8,
+                     {"hotspot_frac": 0.5}),
+    ("hotspot", 16): ((0.001, 0.002, 0.003, 0.0045, 0.007, 0.01, 0.015), 8,
+                      {"hotspot_frac": 0.5}),
+    ("transpose", 8): ((0.02, 0.08, 0.15, 0.25, 0.4, 0.6), 24, {}),
+    ("transpose", 16): ((0.02, 0.05, 0.1, 0.18, 0.3, 0.45), 16, {}),
+}
+
+MIXED_MESHES = (8, 16)
+
+
+def _workers() -> int:
+    return min(4, os.cpu_count() or 1)
+
+
+def _jsonable(sat: float):
+    # JSON has no Infinity literal; "inf" marks "did not saturate in the
+    # swept range", which for saturation points is strictly *better* than
+    # any finite rate (and distinct from saturating at the last rate).
+    return "inf" if math.isinf(sat) else sat
+
+
+def _sweep_record(pattern: str, side: int, policies=POLICIES, vcs=VCS) -> dict:
+    rates, ppn, kw = SWEEPS[(pattern, side)]
+    res = compare_policies(
+        Mesh2D(side, side), pattern, rates, policies=policies, vcs=vcs,
+        packets_per_node=ppn, params=PAPER_MICRO, workers=_workers(), **kw,
+    )
+    shifts = saturation_shifts(res)
+    return {
+        "rates": list(rates),
+        "packets_per_node": ppn,
+        "rows": [
+            {
+                "policy": r.policy,
+                "num_vcs": r.num_vcs,
+                "saturation": _jsonable(r.saturation),
+                "mean_latency": [round(p.mean_latency, 1) for p in r.points],
+                "throughput": [round(p.throughput, 4) for p in r.points],
+                "shift_vs_xy": _jsonable(shifts[(r.policy, r.num_vcs)]),
+            }
+            for r in res
+        ],
+    }
+
+
+def _mixed_record(side: int) -> dict:
+    trace = mixed_storm(
+        Mesh2D(side, side), tile_bytes=4096, unicasts_per_node=4,
+        rate=1.0, phases=2,
+    )
+    makespans = {}
+    for v in VCS:
+        r = replay(trace, params=PAPER_MICRO, num_vcs=v)
+        makespans[str(v)] = r.makespan
+    return makespans
+
+
+def _row_sat(rec: dict, policy: str, num_vcs: int = 1) -> float:
+    for row in rec["rows"]:
+        if row["policy"] == policy and row["num_vcs"] == num_vcs:
+            return math.inf if row["saturation"] == "inf" else row["saturation"]
+    raise KeyError((policy, num_vcs))
+
+
+def rows():
+    results: dict = {"sweeps": {}, "mixed_storm": {}}
+    out = []
+    for (pattern, side), _ in SWEEPS.items():
+        t0 = time.perf_counter()
+        rec = _sweep_record(pattern, side)
+        wall = time.perf_counter() - t0
+        results["sweeps"][f"{pattern}_{side}x{side}"] = rec
+        for row in rec["rows"]:
+            out.append((
+                f"{pattern}{side}/{row['policy']}/vc{row['num_vcs']}",
+                wall * 1e6 / len(rec["rows"]),
+                f"sat={row['saturation']};shift_vs_xy={row['shift_vs_xy']}",
+            ))
+    for side in MIXED_MESHES:
+        makespans = _mixed_record(side)
+        results["mixed_storm"][f"{side}x{side}"] = makespans
+        improve = makespans["1"] / makespans["2"]
+        out.append((
+            f"mixed{side}/vcs", 0.0,
+            ";".join(f"vc{v}={m}" for v, m in makespans.items())
+            + f";x_vc2_over_vc1={improve:.2f}",
+        ))
+    # The two headline properties BENCH_routing.json exists to track:
+    hot16 = results["sweeps"]["hotspot_16x16"]
+    results["claims"] = {
+        "o1turn_hotspot16_saturates_after_xy":
+            _row_sat(hot16, "o1turn") > _row_sat(hot16, "xy"),
+        "mixed_storm_2vc_beats_1vc": {
+            k: v["2"] < v["1"] for k, v in results["mixed_storm"].items()
+        },
+    }
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    return out
+
+
+def smoke() -> int:
+    """CI gate: routing diversity and VC isolation must actually pay.
+
+    * O1TURN must saturate strictly later than XY on the 8x8 transpose
+      sweep (adaptive-routing scenario family).
+    * The 8x8 mixed-class storm must complete strictly earlier with 2
+      VCs than with 1 (head-of-line blocking scenario family).
+    """
+    rec = _sweep_record("transpose", 8, policies=("xy", "o1turn"), vcs=(1,))
+    sat_xy = _row_sat(rec, "xy")
+    sat_o1 = _row_sat(rec, "o1turn")
+    print(f"transpose8 saturation: xy={sat_xy} o1turn={sat_o1}")
+    if not sat_o1 > sat_xy:
+        print("FAIL: O1TURN saturates no later than XY on the transpose sweep")
+        return 1
+    makespans = _mixed_record(8)
+    print(f"mixed8 makespans: {makespans}")
+    if not makespans["2"] < makespans["1"]:
+        print("FAIL: 2 VCs do not beat 1 VC on the mixed-class storm")
+        return 1
+    print("OK: o1turn outlasts xy; 2 VCs strictly beat 1 on the mixed storm")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    for name, us, derived in rows():
+        print(f"{name},{us},{derived}")

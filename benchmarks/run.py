@@ -19,6 +19,7 @@ MODULES = [
     ("Tab1_Fig10_energy", "benchmarks.bench_energy"),
     ("Traffic", "benchmarks.bench_traffic"),
     ("Engine", "benchmarks.bench_engine"),
+    ("Routing", "benchmarks.bench_routing"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

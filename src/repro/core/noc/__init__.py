@@ -5,7 +5,26 @@
 ``netsim``    — flit-level 2-D-mesh simulator (multicast fork / reduction
                 join); streams keep exact Fraction beat arithmetic and
                 expose both per-call (``requests``) and incremental
-                (``ready_units``/``advance_unit``) readiness
+                (``ready_units``/``advance_unit``) readiness; routes and
+                collective trees come from the configured routing policy,
+                and every stream carries the virtual channel of its
+                traffic class
+``routing``   — router microarchitecture subsystem:
+                ``routing.policies``  pluggable deterministic minimal
+                                      routing — ``xy`` (reference),
+                                      ``yx``, ``o1turn`` (cycle-balanced
+                                      XY/YX split), ``oddeven`` (Chiu's
+                                      turn model, deterministic
+                                      load-spreading selection);
+                                      ``NoCParams.routing`` selects
+                ``routing.turns``     exact channel-dependency-graph
+                                      deadlock-freedom checks per route
+                                      class (O1TURN needs a VC per class)
+                ``routing.trees``     policy-generic multicast fork /
+                                      reduction join tree builders,
+                                      bit-identical to the legacy XY
+                                      builders for ``xy``, memoized on
+                                      (policy, mesh, addresses)
 ``engine``    — three bit-identical run loops: ``heap`` (default; global
                 min-heap keyed on exact next-ready cycle, lazy
                 invalidation, Fenwick-tracked round-robin positions,
@@ -13,7 +32,10 @@
                 path), ``event`` (idle-gap fast-forward, O(streams) per
                 active cycle) and ``cycle`` (the per-cycle reference
                 loop).  Identical per-stream arrivals, completion cycles
-                and arbitration counter across all three.
+                and arbitration counter across all three; all arbitrate
+                one beat per (link, VC) per cycle (``NoCParams.num_vcs``,
+                ``vc_map`` / ``vc_select``), which degenerates to the
+                historical whole-link arbitration at ``num_vcs=1``.
 ``traffic``   — traffic engine subsystem:
                 ``traffic.patterns``  seedable synthetic workloads (uniform,
                                       transpose, bit-complement, bit-reversal,
@@ -26,9 +48,14 @@
                                       double-buffered SUMMA overlap)
                 ``traffic.sweep``     injection-rate vs. latency/throughput
                                       saturation curves; ``workers=N`` fans
-                                      points over a process pool
+                                      points over a process pool;
+                                      ``compare_policies`` reports the
+                                      saturation-point shift per
+                                      (routing policy, VC count)
 ``energy``    — Table-1 energy model and Fig-10 scaling
-``calibrate`` — validation of every numeric claim in the paper
+``calibrate`` — validation of every numeric claim in the paper, plus
+                ``load_claims``: saturation-aware checks of a sweep
+                curve at a chosen offered load (not just idle-network)
 """
 
 from repro.core.noc.params import NoCParams, PAPER_MICRO, PAPER_GEMM  # noqa: F401

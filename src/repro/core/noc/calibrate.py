@@ -3,6 +3,17 @@
 Each entry declares the claim from the paper, the achieved value from our
 models/simulator and an acceptance tolerance.  ``benchmarks.run`` prints
 the table; ``tests/test_noc_claims.py`` asserts every row.
+
+Two calibration regimes:
+
+* :func:`all_claims` — the paper's own idle-network microbenchmark and
+  GEMM claims (analytical models, no contention).
+* :func:`load_claims` — saturation-aware checks: given a measured
+  ``traffic.sweep`` curve, validates that at a chosen offered load the
+  network still behaves like the calibrated model (latency inflation
+  bounded, delivered throughput tracking offered load, load below the
+  saturation knee).  This is what lets model alphas/betas be sanity-
+  checked *under load*, not just on an idle network.
 """
 
 from __future__ import annotations
@@ -120,6 +131,56 @@ def all_claims() -> list[Claim]:
     for row, col, val, tol in anchors:
         claims.append(Claim(f"Table1 {row} {col} ({val})", val, t1[row][col], tol))
     return claims
+
+
+def load_claims(points, at_rate: float, knee: float = 3.0) -> list[Claim]:
+    """Saturation-aware claim checks at one offered load.
+
+    ``points`` is a :func:`repro.core.noc.traffic.sweep.saturation_sweep`
+    curve (ascending rates, first point treated as the zero-load
+    anchor); ``at_rate`` selects the swept point nearest the requested
+    offered load.  Three checks come back as :class:`Claim` rows:
+
+    * the offered load sits below the curve's saturation knee,
+    * mean latency at that load is within ``knee``x the zero-load
+      latency (the idle-network calibration still predicts it),
+    * delivered throughput still tracks offered load linearly
+      (throughput/rate within 15% of the zero-load point's ratio).
+
+    Above saturation the latter two fail by construction — which is the
+    point: a calibration validated only at idle would silently accept
+    them.
+    """
+    from repro.core.noc.traffic.sweep import saturation_rate
+
+    if not points:
+        raise ValueError("load_claims needs a non-empty sweep curve")
+    base = points[0]
+    pt = min(points, key=lambda q: abs(q.rate - at_rate))
+    sat = saturation_rate(points, knee=knee)
+    inflation = pt.mean_latency / base.mean_latency if base.mean_latency else 1.0
+    tracking = (
+        (pt.throughput / base.throughput) * (base.rate / pt.rate)
+        if base.throughput and pt.rate else 0.0
+    )
+    return [
+        Claim(f"offered load {pt.rate:g} below saturation knee ({sat:g})",
+              1.0, 1.0 if pt.rate < sat else 0.0, 0.0),
+        Claim(f"latency inflation at load {pt.rate:g} within {knee:g}x idle",
+              1.0, inflation, knee - 1.0),
+        Claim(f"throughput tracks offered load at {pt.rate:g}",
+              1.0, tracking, 0.15),
+    ]
+
+
+def report_load(points, at_rate: float, knee: float = 3.0) -> str:
+    lines = [f"{'claim':64s} {'target':>9s} {'ours':>9s}  ok"]
+    for c in load_claims(points, at_rate, knee=knee):
+        lines.append(
+            f"{c.name:64s} {c.paper_value:9.3f} {c.achieved:9.3f}  "
+            f"{'PASS' if c.ok else 'FAIL'}"
+        )
+    return "\n".join(lines)
 
 
 def report() -> str:

@@ -8,7 +8,12 @@ with *no* beat eligible to move anywhere.
 
 Two accelerated engines keep the per-cycle arbitration semantics
 **bit-identical** (same round-robin start offset, same busy-link set,
-same within-cycle request ordering) to the legacy loop:
+same within-cycle request ordering) to the legacy loop.  All three
+arbitrate one beat per (physical link, virtual channel) per cycle —
+streams carry a ``vc`` assigned from their traffic class (or packet id)
+by ``NoCParams.vc_of``, so collective and unicast classes stop blocking
+each other head-of-line once ``num_vcs > 1``, while ``num_vcs=1``
+reproduces the historical whole-link arbitration exactly:
 
 ``run_event_driven``
     Fast-forwards over idle gaps: whenever a cycle ends with no beat
@@ -95,7 +100,7 @@ def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
         pending = [s for s in sim.streams if s.done_cycle is None]
         if not pending:
             break
-        busy: set = set()
+        busy: set = set()  # (physical link, VC) pairs claimed this cycle
         progressed = False
         start = sim._rr_next() % len(pending)
         for s in pending[start:] + pending[:start]:
@@ -109,11 +114,12 @@ def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
                 c = s.next_ready_cycle()
                 s.ready_hint = math.inf if c is None else max(c, t + 1)
                 continue
+            vc = s.vc
             for group in reqs:
                 links = [e for e in group if e[0] != e[1]]
-                if any(e in busy for e in links):
+                if any((e, vc) in busy for e in links):
                     continue
-                busy.update(links)
+                busy.update((e, vc) for e in links)
                 s.advance(group, t)  # resets the stream's ready_hint
                 progressed = True
             if s.done_cycle is not None:
@@ -199,8 +205,11 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
     gheap: list[tuple[int, int]] = []   # (next-ready cycle, stream index)
     sched: list = [None] * n            # lazy-invalidation: entry valid iff
                                         # its cycle == sched[stream index]
-    # Busy-link arbitration interns each physical link as a small int so
-    # the inner busy-set tests never hash Coord tuples.
+    # Busy-link arbitration interns each (physical link, VC) pair as a
+    # small int so the inner busy-set tests never hash Coord tuples.
+    # Streams in different VCs intern disjoint ids for the same link and
+    # therefore never collide; with num_vcs=1 the partition is identical
+    # to the historical whole-link interning.
     link_id: dict = {}
     linkids: list = [None] * n          # per stream: per unit, tuple of ids
     for i, s in enumerate(streams):
@@ -208,9 +217,10 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
             continue
         fen.add(i, 1)
         s._heap_init()
+        vc = s.vc
         linkids[i] = [
             tuple(
-                link_id.setdefault(e, len(link_id)) for e in links
+                link_id.setdefault((e, vc), len(link_id)) for e in links
             )
             for links in s._unit_links
         ]

@@ -3,8 +3,12 @@
 A compact wormhole-style simulator standing in for the paper's
 cycle-accurate RTL simulation (Section 4.2).  It models:
 
-* per-link occupancy (one beat per link per cycle, 64 B beats),
-* XY-routed unicast bursts with DMA round-trip injection latency ``alpha``,
+* per-(link, VC) occupancy (one beat per link per virtual channel per
+  cycle, 64 B beats; ``NoCParams.num_vcs=1`` reduces to whole-link
+  occupancy), with each stream assigned the VC of its traffic class,
+* policy-routed unicast bursts (``NoCParams.routing``: XY reference,
+  YX, O1TURN, odd-even — see ``noc/routing``) with DMA round-trip
+  injection latency ``alpha``,
 * multicast *fork* semantics of the extended ``xy_route_fork`` +
   ``stream_fork`` (Section 3.1.2): a beat is accepted only when **all**
   selected output links are ready, and forks advance in lockstep,
@@ -32,7 +36,8 @@ from typing import Optional, Sequence
 
 from repro.core.noc.engine import run_event_driven, run_heap
 from repro.core.noc.params import NoCParams
-from repro.core.topology import Coord, Mesh2D, MultiAddress, multicast_fork_tree, reduction_join_tree
+from repro.core.noc.routing import fork_tree, get_policy, join_tree
+from repro.core.topology import Coord, Mesh2D, MultiAddress
 
 Edge = tuple[Coord, Coord]  # (from_node, to_node); from==to encodes local inject/eject
 
@@ -96,6 +101,12 @@ class _StreamState:
     # forever).
     ready_hint: Optional[float] = None
     gates: list["_StreamState"] = dataclasses.field(default_factory=list)
+    # Virtual channel this stream's beats travel in.  The engines
+    # arbitrate one beat per (link, VC) per cycle, so streams in
+    # different VCs never block each other on a shared physical link;
+    # with num_vcs=1 every stream is VC 0 and arbitration degenerates to
+    # the historical whole-link behavior bit-for-bit.
+    vc: int = 0
 
     def __post_init__(self):
         if self.rate:
@@ -492,9 +503,11 @@ class NoCSim:
     def __init__(self, mesh: Mesh2D, params: NoCParams | None = None):
         self.mesh = mesh
         self.p = params or NoCParams()
+        self.policy = get_policy(self.p.routing)
         self.streams: list[_StreamState] = []
         self._atomic_busy_until = 0  # shared RMW unit for the SW barrier
         self._rr = 0  # round-robin arbitration counter, one slot per cycle
+        self._pkt_seq = 0  # per-sim packet id: O1TURN split, packet-mode VCs
         self.recorders: list = []  # traffic.trace.TraceRecorder et al.
 
     # -- arbitration counter -------------------------------------------------
@@ -518,7 +531,9 @@ class NoCSim:
     def add_unicast(self, src: Coord, dst: Coord, nbytes: int, start: float = 0.0):
         self._record("unicast", src=src, dst=dst, nbytes=nbytes, start=start)
         n = self.p.beats(nbytes)
-        path = self.mesh.xy_route(src, dst)
+        pid = self._pkt_seq
+        self._pkt_seq += 1
+        path = self.policy.route(self.mesh, src, dst, pid)
         edges: list[Edge] = [(src, src)] + list(zip(path, path[1:])) + [(dst, dst)]
         prereqs, groups = _chain(edges)
         alpha = self.p.alpha(self.mesh.hops(src, dst))
@@ -529,6 +544,7 @@ class NoCSim:
             rate={},
             inject={edges[0]: (start + alpha, self.p.beta)},
             finals=[edges[-1]],
+            vc=self.p.vc_of("unicast", packet_id=pid),
         )
         self.streams.append(st)
         return st
@@ -536,7 +552,7 @@ class NoCSim:
     def add_multicast(self, src: Coord, maddr: MultiAddress, nbytes: int, start: float = 0.0):
         self._record("multicast", src=src, maddr=maddr, nbytes=nbytes, start=start)
         n = self.p.beats(nbytes)
-        fork = multicast_fork_tree(self.mesh, src, maddr)
+        fork = fork_tree(self.mesh, src, maddr, policy=self.policy)
         # fork maps router -> set(next hops); local delivery encoded as self.
         children: dict[Coord, list[Coord]] = {k: sorted(v, key=tuple) for k, v in fork.items()}
         prereqs: dict[Edge, list[Edge]] = {}
@@ -572,6 +588,7 @@ class NoCSim:
             rate={},
             inject={inject_edge: (start + self.p.alpha(1), self.p.beta)},
             finals=finals or [inject_edge],
+            vc=self.p.vc_of("multicast"),
         )
         self.streams.append(st)
         return st
@@ -583,13 +600,14 @@ class NoCSim:
         nbytes: int,
         start: float = 0.0,
         inject_alpha: float | None = None,
+        traffic_class: str = "reduction",
     ):
         self._record(
             "reduction", sources=tuple(sources), dst=dst, nbytes=nbytes, start=start
         )
         n = self.p.beats(nbytes)
         alpha = self.p.alpha(1) if inject_alpha is None else inject_alpha
-        join = reduction_join_tree(self.mesh, list(sources), dst)
+        join = join_tree(self.mesh, list(sources), dst, policy=self.policy)
         # join maps router -> set(inputs); input==router encodes local source.
         prereqs: dict[Edge, list[Edge]] = {}
         rate: dict[Edge, float] = {}
@@ -644,6 +662,7 @@ class NoCSim:
             rate=rate,
             inject=inject,
             finals=[eject],
+            vc=self.p.vc_of(traffic_class),
         )
         self.streams.append(st)
         return st
@@ -675,15 +694,16 @@ class NoCSim:
             pending = [s for s in self.streams if s.done_cycle is None]
             if not pending:
                 break
-            busy: set[Edge] = set()
+            busy: set[tuple[Edge, int]] = set()  # (physical link, VC)
             progressed = False
             start = self._rr_next() % len(pending)
             for s in pending[start:] + pending[:start]:
+                vc = s.vc
                 for group in s.requests(t):
                     links = [e for e in group if e[0] != e[1]]
-                    if any(e in busy for e in links):
+                    if any((e, vc) in busy for e in links):
                         continue
-                    busy.update(links)
+                    busy.update((e, vc) for e in links)
                     s.advance(group, t)
                     progressed = True
                 if s.done_cycle is not None:
@@ -733,7 +753,8 @@ class NoCSim:
         recorders, self.recorders = self.recorders, []
         try:
             self.add_reduction(
-                list(participants), counter, nbytes=8, start=0.0, inject_alpha=2.0
+                list(participants), counter, nbytes=8, start=0.0, inject_alpha=2.0,
+                traffic_class="barrier",
             )
         finally:
             self.recorders = recorders

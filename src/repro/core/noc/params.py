@@ -20,6 +20,15 @@ from __future__ import annotations
 import dataclasses
 
 
+# Canonical traffic classes and their default VC preference order: unicast
+# first (latency-sensitive request traffic), then the collective classes.
+# With fewer VCs than classes the tail classes share the last VC, so
+# ``num_vcs=2`` already separates unicast from all collective traffic —
+# the head-of-line blocking split the mixed storms need.
+VC_CLASSES = ("unicast", "multicast", "reduction", "barrier")
+_VC_CLASS_INDEX = {c: i for i, c in enumerate(VC_CLASSES)}
+
+
 @dataclasses.dataclass(frozen=True)
 class NoCParams:
     """Cycle-level parameters of the wide/narrow NoC and the clusters."""
@@ -29,6 +38,26 @@ class NoCParams:
     beta: float = 1.0             # inverse bandwidth [cycles / beat]
     hop_cycles: float = 1.0       # per-router/link latency [cycles / hop]
     alpha0: float = 50.0          # DMA setup + protocol round-trip base [cycles]
+
+    # -- router microarchitecture -----------------------------------------
+    # Routing policy name (see repro.core.noc.routing): "xy" (reference),
+    # "yx", "o1turn", "oddeven".  Resolved lazily by NoCSim so this module
+    # stays import-light; unknown names raise there.
+    routing: str = "xy"
+    # Virtual channels: the engines arbitrate one beat per (link, VC) per
+    # cycle, so beats in different VCs never block each other.  num_vcs=1
+    # with vc_select="class" is bit-identical to the historical
+    # whole-link arbitration.
+    num_vcs: int = 1
+    # Explicit traffic-class -> VC map as (class, vc) pairs (a tuple so
+    # the dataclass stays frozen/hashable).  None = the default map:
+    # vc = min(class index in VC_CLASSES, num_vcs - 1).
+    vc_map: tuple[tuple[str, int], ...] | None = None
+    # "class": VC chosen by traffic class (collective isolation).
+    # "packet": unicast packets round-robin over all VCs by packet id
+    # (channel-slicing for single-class synthetic sweeps); collective
+    # classes still use the class map.
+    vc_select: str = "class"
 
     # -- synchronization ---------------------------------------------------
     delta: float = 10.0           # inter-stage barrier cost in SW schedules [cycles]
@@ -49,6 +78,41 @@ class NoCParams:
     # cluster DMA engine; the HW path streams them from independent memory
     # tiles in parallel.  (Section 4.3.1 discussion; see DESIGN.md.)
     sw_gemm_serializes_ab: bool = True
+
+    def __post_init__(self):
+        if self.num_vcs < 1:
+            raise ValueError(f"num_vcs must be >= 1, got {self.num_vcs}")
+        if self.vc_select not in ("class", "packet"):
+            raise ValueError(
+                f"vc_select must be 'class' or 'packet', got {self.vc_select!r}"
+            )
+        if self.vc_map is not None:
+            for cls, vc in self.vc_map:
+                if cls not in _VC_CLASS_INDEX:
+                    raise ValueError(
+                        f"unknown traffic class {cls!r}; one of {VC_CLASSES}"
+                    )
+                if not 0 <= vc < self.num_vcs:
+                    raise ValueError(
+                        f"vc_map assigns {cls!r} to VC {vc}, outside "
+                        f"[0, {self.num_vcs})"
+                    )
+
+    def vc_of(self, kind: str, packet_id: int | None = None) -> int:
+        """Virtual channel for a stream of traffic class ``kind``.
+
+        ``packet_id`` enables the "packet" selection mode (unicast
+        round-robin across VCs); class mode ignores it.
+        """
+        if kind not in _VC_CLASS_INDEX:
+            raise ValueError(f"unknown traffic class {kind!r}; one of {VC_CLASSES}")
+        if self.vc_select == "packet" and packet_id is not None:
+            return packet_id % self.num_vcs
+        if self.vc_map is not None:
+            for cls, vc in self.vc_map:
+                if cls == kind:
+                    return vc
+        return min(_VC_CLASS_INDEX[kind], self.num_vcs - 1)
 
     def alpha(self, hops: float) -> float:
         """Round-trip latency of a DMA transfer spanning ``hops`` hops."""

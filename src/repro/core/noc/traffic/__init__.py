@@ -2,13 +2,19 @@
 
 ``patterns`` — seedable synthetic generators (uniform, transpose,
               bit-complement, bit-reversal, hotspot, neighbor,
-              all-to-all) and SUMMA/FCL collective storms
-``trace``    — TrafficEvent/Trace serialization, live-sim TraceRecorder,
-              and contended phase-by-phase replay
-``sweep``    — injection-rate vs. latency/throughput saturation curves
+              all-to-all), SUMMA/FCL collective storms, and the
+              mixed-class unicast+reduction storm (the VC
+              head-of-line-blocking scenario)
+``trace``    — TrafficEvent/Trace serialization (schema v2: traces carry
+              the routing policy / VC count they were captured under),
+              live-sim TraceRecorder, and contended phase-by-phase replay
+``sweep``    — injection-rate vs. latency/throughput saturation curves;
+              ``compare_policies`` sweeps (routing policy, VC count)
+              configurations and reports the saturation-point shift
 
 The event-driven engine that makes large-mesh sweeps feasible lives one
-level up in ``noc/engine.py``.
+level up in ``noc/engine.py``; the routing policies live in
+``noc/routing``.
 """
 
 from repro.core.noc.traffic.patterns import (  # noqa: F401
@@ -16,17 +22,22 @@ from repro.core.noc.traffic.patterns import (  # noqa: F401
     SyntheticConfig,
     collective_storm,
     fcl_storm,
+    mixed_storm,
     summa_storm,
     synthetic_trace,
 )
 from repro.core.noc.traffic.sweep import (  # noqa: F401
     CSV_HEADER,
+    PolicySweep,
     SweepPoint,
+    compare_policies,
     measure,
     saturation_rate,
+    saturation_shifts,
     saturation_sweep,
 )
 from repro.core.noc.traffic.trace import (  # noqa: F401
+    TRACE_VERSION,
     ReplayResult,
     StreamResult,
     Trace,

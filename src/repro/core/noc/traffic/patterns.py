@@ -242,6 +242,47 @@ def fcl_storm(
     return trace
 
 
+def mixed_storm(
+    mesh: Mesh2D,
+    tile_bytes: int = 1024,
+    unicast_bytes: int = 256,
+    unicasts_per_node: int = 2,
+    rate: float = 0.05,
+    phases: int = 1,
+    seed: int = 0,
+) -> Trace:
+    """Mixed-class storm: per-column reductions + uniform unicast background.
+
+    Every phase injects the FCL column reductions (each column's tiles
+    reduce into its row-0 tile — pure column-link traffic under the
+    XY-mirror join) *concurrently* with a seeded uniform-random unicast
+    background whose XY tails also cross those columns, then barriers.
+    This is the head-of-line blocking scenario virtual channels exist
+    for: with ``num_vcs=1`` the unicast and reduction classes contend
+    beat-by-beat on shared column links; with ``num_vcs>=2`` the default
+    class map separates them and the storm completes strictly earlier
+    (asserted in tests and gated in ``benchmarks.bench_routing``).
+
+    The background is the standard seedable uniform generator
+    (:func:`synthetic_trace`, reseeded per phase), not a private
+    injection loop, so the two share one injection model.
+    """
+    _check_storm_mesh(mesh)
+    trace = Trace(mesh.cols, mesh.rows)
+    for ph in range(phases):
+        evs, _ = _col_reduction_events(mesh, tile_bytes, ph, 0.0, 0.0)
+        trace.events.extend(evs)
+        background = synthetic_trace(mesh, SyntheticConfig(
+            pattern="uniform", rate=rate, nbytes=unicast_bytes,
+            packets_per_node=unicasts_per_node, seed=seed + ph,
+        ))
+        trace.events.extend(
+            dataclasses.replace(e, phase=ph) for e in background.events
+        )
+        trace.events.append(_barrier_event(mesh, ph))
+    return trace
+
+
 def collective_storm(
     mesh: Mesh2D,
     tile_bytes: int = 2048,

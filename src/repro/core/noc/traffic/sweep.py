@@ -119,6 +119,91 @@ def saturation_sweep(
     return [measure(mesh, cfg, params=params, engine=engine) for cfg in cfgs]
 
 
+@dataclasses.dataclass(frozen=True)
+class PolicySweep:
+    """One (routing policy, VC count) row of a :func:`compare_policies` run."""
+
+    policy: str
+    num_vcs: int
+    points: tuple[SweepPoint, ...]
+    saturation: float              # knee estimate over ``points`` (inf = none)
+
+    def csv(self) -> str:
+        sat = "inf" if math.isinf(self.saturation) else f"{self.saturation:g}"
+        return f"{self.policy},{self.num_vcs},{sat}"
+
+
+def compare_policies(
+    mesh: Mesh2D,
+    pattern: str,
+    rates: Sequence[float],
+    policies: Sequence[str] = ("xy", "yx", "o1turn", "oddeven"),
+    vcs: Sequence[int] = (1,),
+    nbytes: int = 256,
+    packets_per_node: int = 4,
+    seed: int = 0,
+    params: NoCParams | None = None,
+    engine: str = "heap",
+    workers: int | None = None,
+    vc_select: str = "packet",
+    knee: float = 3.0,
+    **pattern_kw,
+) -> list[PolicySweep]:
+    """Saturation curves for every (policy, VC count) configuration.
+
+    Every configuration replays the *same* seeded packet population
+    (destinations and unit-rate gaps are drawn once per seed), so the
+    saturation-point shift between rows isolates the routing/channel
+    microarchitecture — the axis the hotspot and transpose sweeps are
+    designed to expose.  ``vc_select`` defaults to ``"packet"`` because
+    synthetic sweeps are single-class (all unicast): packets round-robin
+    over the VCs, modeling per-link channel slicing; pass ``"class"``
+    when sweeping mixed-class traces.
+    """
+    base = params or NoCParams()
+    out = []
+    for policy in policies:
+        for num_vcs in vcs:
+            p = dataclasses.replace(
+                base, routing=policy, num_vcs=num_vcs, vc_select=vc_select
+            )
+            pts = saturation_sweep(
+                mesh, pattern, rates, nbytes=nbytes,
+                packets_per_node=packets_per_node, seed=seed, params=p,
+                engine=engine, workers=workers, **pattern_kw,
+            )
+            out.append(PolicySweep(
+                policy=policy, num_vcs=num_vcs, points=tuple(pts),
+                saturation=saturation_rate(pts, knee=knee),
+            ))
+    return out
+
+
+def saturation_shifts(
+    results: Sequence[PolicySweep],
+    baseline: tuple[str, int] | None = None,
+) -> dict[tuple[str, int], float]:
+    """Saturation rate of each row relative to the baseline row
+    (default: ``("xy", min VC count present)``).  > 1 means the row
+    saturates later than XY; ``inf`` means the row never saturated in
+    the swept range while the baseline did."""
+    if not results:
+        return {}
+    if baseline is None:
+        baseline = ("xy", min(r.num_vcs for r in results))
+    by_key = {(r.policy, r.num_vcs): r.saturation for r in results}
+    base = by_key.get(baseline)
+    if base is None:
+        raise ValueError(f"baseline row {baseline} not in results")
+    out = {}
+    for key, sat in by_key.items():
+        if math.isinf(base):
+            out[key] = 1.0 if math.isinf(sat) else sat / base
+        else:
+            out[key] = sat / base
+    return out
+
+
 def saturation_rate(points: Sequence[SweepPoint], knee: float = 3.0) -> float:
     """First offered load whose mean latency exceeds ``knee`` x the
     zero-load latency — a simple saturation-point estimate.  Returns

@@ -80,11 +80,26 @@ class TrafficEvent:
         )
 
 
+TRACE_VERSION = 2
+
+
 @dataclasses.dataclass
 class Trace:
     cols: int
     rows: int
     events: list[TrafficEvent] = dataclasses.field(default_factory=list)
+    # Router configuration the trace was captured under (schema v2).
+    # ``None`` = unspecified: replay falls back to the caller's params
+    # (whose defaults are XY / 1 VC / class-mapped), which is also how
+    # version-less and v1 trace files load.  A TraceRecorder stamps the
+    # live sim's full router configuration — policy, VC count, VC
+    # selection mode and any explicit class map — so recorded traces
+    # replay bit-identically under the configuration they were captured
+    # with.
+    routing: Optional[str] = None
+    num_vcs: Optional[int] = None
+    vc_select: Optional[str] = None
+    vc_map: Optional[tuple[tuple[str, int], ...]] = None
 
     @property
     def mesh(self) -> Mesh2D:
@@ -103,9 +118,14 @@ class Trace:
     def to_json(self, indent: int | None = None) -> str:
         return json.dumps(
             {
-                "version": 1,
+                "version": TRACE_VERSION,
                 "cols": self.cols,
                 "rows": self.rows,
+                "routing": self.routing,
+                "num_vcs": self.num_vcs,
+                "vc_select": self.vc_select,
+                "vc_map": [list(p) for p in self.vc_map]
+                if self.vc_map is not None else None,
                 "events": [e.to_dict() for e in self.events],
             },
             indent=indent,
@@ -114,12 +134,24 @@ class Trace:
     @staticmethod
     def from_json(s: str) -> "Trace":
         d = json.loads(s)
-        if d.get("version") != 1:
-            raise ValueError(f"unsupported trace version {d.get('version')!r}")
+        version = d.get("version", 1)  # version-less files predate v1
+        if version not in (1, 2):
+            raise ValueError(f"unsupported trace version {version!r}")
+        # v1 (and version-less) traces carry no router configuration:
+        # the stamps stay None and replay applies its XY/1-VC parameter
+        # defaults.
+        v2 = version >= 2
+        vc_map = d.get("vc_map") if v2 else None
         return Trace(
             cols=int(d["cols"]),
             rows=int(d["rows"]),
             events=[TrafficEvent.from_dict(e) for e in d["events"]],
+            routing=d.get("routing") if v2 else None,
+            num_vcs=int(d["num_vcs"]) if v2 and d.get("num_vcs")
+            is not None else None,
+            vc_select=d.get("vc_select") if v2 else None,
+            vc_map=tuple((str(c), int(vc)) for c, vc in vc_map)
+            if vc_map is not None else None,
         )
 
 
@@ -139,6 +171,13 @@ class TraceRecorder:
     @classmethod
     def attach(cls, sim: NoCSim) -> "TraceRecorder":
         rec = cls(sim.mesh)
+        # Stamp the live router configuration so the trace replays
+        # bit-identically under the configuration it was captured with
+        # (schema v2).
+        rec.trace.routing = sim.p.routing
+        rec.trace.num_vcs = sim.p.num_vcs
+        rec.trace.vc_select = sim.p.vc_select
+        rec.trace.vc_map = sim.p.vc_map
         sim.recorders.append(rec)
         return rec
 
@@ -229,12 +268,49 @@ def _add_event(sim: NoCSim, ev: TrafficEvent, start: float):
     raise ValueError(f"unknown event kind {ev.kind!r}")
 
 
+def _effective_params(
+    trace: Trace,
+    params: NoCParams | None,
+    routing: Optional[str],
+    num_vcs: Optional[int],
+) -> NoCParams:
+    """Router configuration precedence: explicit ``replay`` argument >
+    trace stamp (schema v2) > caller params (defaults: XY, 1 VC).
+
+    The VC selection mode and class map have no explicit ``replay``
+    arguments (they only matter for stamped traces), so the stamp wins
+    over params whenever present — except that a stamped ``vc_map`` is
+    dropped when the effective VC count cannot hold it (an explicit
+    ``num_vcs`` override below the captured count re-configures the
+    trace; classes then fall back to the default map)."""
+    p = params or NoCParams()
+    routing = routing if routing is not None else trace.routing
+    num_vcs = num_vcs if num_vcs is not None else trace.num_vcs
+    updates = {}
+    if routing is not None and routing != p.routing:
+        updates["routing"] = routing
+    if num_vcs is not None and num_vcs != p.num_vcs:
+        updates["num_vcs"] = num_vcs
+    if trace.vc_select is not None and trace.vc_select != p.vc_select:
+        updates["vc_select"] = trace.vc_select
+    effective_vcs = num_vcs if num_vcs is not None else p.num_vcs
+    if (
+        trace.vc_map is not None
+        and trace.vc_map != p.vc_map
+        and all(vc < effective_vcs for _, vc in trace.vc_map)
+    ):
+        updates["vc_map"] = trace.vc_map
+    return dataclasses.replace(p, **updates) if updates else p
+
+
 def replay(
     trace: Trace,
     params: NoCParams | None = None,
     max_cycles: int = 50_000_000,
     engine: str = "heap",
     mode: str = "barrier",
+    routing: Optional[str] = None,
+    num_vcs: Optional[int] = None,
 ) -> ReplayResult:
     """Run a trace through the simulator under shared-fabric contention.
 
@@ -250,12 +326,18 @@ def replay(
     start per-row/column as soon as the previous iteration's traffic has
     freed the tiles, and yields a makespan between the fully-serialized
     barrier replay and the uncontended single-phase lower bound.
+
+    Router configuration: a trace stamped with ``routing`` / ``num_vcs``
+    (schema v2, e.g. captured by a :class:`TraceRecorder`) replays under
+    that configuration; the ``routing`` / ``num_vcs`` arguments override
+    it (to re-route a recorded trace under a different policy); both
+    fall back to ``params``.
     """
+    p = _effective_params(trace, params, routing, num_vcs)
     if mode == "window":
-        return _replay_window(trace, params, max_cycles, engine)
+        return _replay_window(trace, p, max_cycles, engine)
     if mode != "barrier":
         raise ValueError(f"unknown replay mode {mode!r}")
-    p = params or NoCParams()
     sim = NoCSim(trace.mesh, p)
     results: list[StreamResult] = []
     phase_end: list[float] = []
@@ -291,7 +373,7 @@ def replay(
 
 def _replay_window(
     trace: Trace,
-    params: NoCParams | None,
+    params: NoCParams,  # already routing/VC-effective (see replay)
     max_cycles: int,
     engine: str,
 ) -> ReplayResult:
@@ -311,7 +393,7 @@ def _replay_window(
     ``run()``, so cross-phase contention in the overlap window is fully
     modeled.
     """
-    p = params or NoCParams()
+    p = params
     mesh = trace.mesh
     sim = NoCSim(mesh, p)
     added: list[tuple[TrafficEvent, object]] = []

@@ -82,6 +82,38 @@ def test_heap_event_cycle_identical_on_random_storms(ops):
     assert _fingerprint(ops, "heap") == ref
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=_ops,
+    routing=st.sampled_from(["xy", "yx", "o1turn", "oddeven"]),
+    num_vcs=st.sampled_from([1, 2, 4]),
+    vc_select=st.sampled_from(["class", "packet"]),
+)
+def test_three_engines_identical_under_random_policy_and_vcs(
+    ops, routing, num_vcs, vc_select
+):
+    """The 3-engine fingerprint equality extended over the router
+    microarchitecture space: any (policy, VC count, VC selection) draw
+    must leave cycle/event/heap bit-identical — arrivals, completion
+    cycles and the arbitration counter."""
+    params = NoCParams(routing=routing, num_vcs=num_vcs, vc_select=vc_select)
+
+    def fingerprint(engine):
+        sim = NoCSim(Mesh2D(4, 4), params)
+        _build(sim, ops)
+        makespan = sim.run(engine=engine)
+        return (
+            makespan,
+            sim._rr,
+            [s.done_cycle for s in sim.streams],
+            [s.arrivals for s in sim.streams],
+        )
+
+    ref = fingerprint("cycle")
+    assert fingerprint("event") == ref
+    assert fingerprint("heap") == ref
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     iters=st.integers(2, 4),

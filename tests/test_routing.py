@@ -1,0 +1,511 @@
+"""Router microarchitecture subsystem: policies, turn models, VCs, traces.
+
+Covers the routing package (route validity, deadlock-freedom turn
+checks, policy-generic fork/join trees vs. the legacy XY builders), the
+virtual-channel threading (per-(link, VC) arbitration equivalence across
+all three engines, head-of-line blocking relief on mixed-class storms),
+the policy/VC sweep comparator, the saturation-aware calibration hook,
+and the v2 trace schema (routing-stamped round-trip, version-less
+compatibility).
+"""
+
+import dataclasses
+import json
+import random
+
+import pytest
+
+from repro.core.noc import calibrate
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import NoCParams, VC_CLASSES
+from repro.core.noc.routing import (
+    POLICIES,
+    deadlock_free,
+    fork_tree,
+    get_policy,
+    has_cycle,
+    join_tree,
+    min_vcs_for_deadlock_freedom,
+    policy_dependencies,
+)
+from repro.core.noc.routing.trees import _fork_tree_cached, _join_tree_cached
+from repro.core.noc.traffic import (
+    SweepPoint,
+    Trace,
+    TraceRecorder,
+    TrafficEvent,
+    compare_policies,
+    mixed_storm,
+    replay,
+    saturation_shifts,
+)
+from repro.core.topology import (
+    Coord,
+    Mesh2D,
+    Submesh,
+    multicast_fork_tree,
+    reduction_join_tree,
+)
+
+P = NoCParams()
+ENGINES = ("cycle", "event", "heap")
+POLICY_NAMES = ("xy", "yx", "o1turn", "oddeven")
+
+
+# ---------------------------------------------------------------------------
+# Route validity and determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_routes_are_minimal_contiguous_and_deterministic(name):
+    mesh = Mesh2D(5, 4)  # non-square, odd extent: parity edge cases
+    policy = get_policy(name)
+    for src in mesh.coords():
+        for dst in mesh.coords():
+            if src == dst:
+                continue
+            for pid in range(3):
+                path = policy.route(mesh, src, dst, pid)
+                assert path[0] == src and path[-1] == dst
+                assert len(path) - 1 == mesh.hops(src, dst), (src, dst, path)
+                assert all(mesh.hops(a, b) == 1 for a, b in zip(path, path[1:]))
+                assert path == policy.route(mesh, src, dst, pid)
+
+
+def test_xy_policy_matches_mesh_xy_route():
+    mesh = Mesh2D(4, 4)
+    policy = get_policy("xy")
+    for src in mesh.coords():
+        for dst in mesh.coords():
+            assert list(policy.route(mesh, src, dst, 7)) == mesh.xy_route(src, dst)
+
+
+def test_o1turn_splits_packets_between_xy_and_yx():
+    mesh = Mesh2D(4, 4)
+    o1, xy, yx = get_policy("o1turn"), get_policy("xy"), get_policy("yx")
+    src, dst = Coord(0, 0), Coord(3, 3)
+    assert o1.route(mesh, src, dst, 0) == xy.route(mesh, src, dst)
+    assert o1.route(mesh, src, dst, 1) == yx.route(mesh, src, dst)
+    assert o1.route(mesh, src, dst, 0) != o1.route(mesh, src, dst, 1)
+    assert {o1.route_class(pid) for pid in range(4)} == {0, 1}
+
+
+def test_tree_routes_are_xy_flag_matches_actual_tree_routes():
+    """Policies declaring tree_routes_are_xy (which routes the tree
+    builders to the legacy XY fast path) must actually produce XY
+    tree/join routes — the flag is load-bearing in routing.trees."""
+    mesh = Mesh2D(5, 4)
+    xy = get_policy("xy")
+    flagged = [p for p in POLICIES.values() if p.tree_routes_are_xy]
+    assert {p.name for p in flagged} == {"xy", "o1turn"}
+    for policy in flagged:
+        for src in mesh.coords():
+            for dst in mesh.coords():
+                if src == dst:
+                    continue
+                assert policy.tree_route(mesh, src, dst) == \
+                    xy.tree_route(mesh, src, dst), policy.name
+                assert policy.join_route(mesh, src, dst) == \
+                    xy.join_route(mesh, src, dst), policy.name
+
+
+def test_unknown_policy_raises_with_known_set():
+    with pytest.raises(ValueError, match="oddeven"):
+        get_policy("torus_vc")
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        NoCSim(Mesh2D(2, 2), NoCParams(routing="bogus"))
+
+
+# ---------------------------------------------------------------------------
+# Turn-model deadlock freedom
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_every_policy_is_deadlock_free_per_route_class(name):
+    assert deadlock_free(get_policy(name), Mesh2D(4, 4))
+
+
+def test_o1turn_needs_one_vc_per_route_class():
+    mesh = Mesh2D(4, 4)
+    assert min_vcs_for_deadlock_freedom(get_policy("xy"), mesh) == 1
+    assert min_vcs_for_deadlock_freedom(get_policy("yx"), mesh) == 1
+    assert min_vcs_for_deadlock_freedom(get_policy("oddeven"), mesh) == 1
+    # the union of XY and YX turns is cyclic: O1TURN is free only with
+    # a VC per class
+    assert has_cycle(policy_dependencies(get_policy("o1turn"), mesh))
+    assert min_vcs_for_deadlock_freedom(get_policy("o1turn"), mesh) == 2
+
+
+def test_oddeven_routes_obey_the_turn_rules():
+    """EN/ES turns never at even columns; NW/SW never at odd columns."""
+    mesh = Mesh2D(5, 5)
+    policy = get_policy("oddeven")
+    for src in mesh.coords():
+        for dst in mesh.coords():
+            if src == dst:
+                continue
+            for pid in range(4):
+                p = policy.route(mesh, src, dst, pid)
+                for (a, b), (_, c) in zip(zip(p, p[1:]), zip(p[1:], p[2:])):
+                    d1 = (b.x - a.x, b.y - a.y)
+                    d2 = (c.x - b.x, c.y - b.y)
+                    if d1 == (1, 0) and d2[1] != 0:       # EN or ES
+                        assert b.x % 2 == 1, (src, dst, p)
+                    if d2 == (-1, 0) and d1[1] != 0:      # NW or SW
+                        assert b.x % 2 == 0, (src, dst, p)
+
+
+# ---------------------------------------------------------------------------
+# Policy-generic fork / join trees
+# ---------------------------------------------------------------------------
+
+
+def test_generic_trees_match_legacy_xy_builders():
+    rng = random.Random(0)
+    mesh = Mesh2D(8, 8)
+    for _ in range(25):
+        w, h = rng.choice([1, 2, 4]), rng.choice([1, 2, 4])
+        ma = Submesh(rng.randrange(0, 8, w), rng.randrange(0, 8, h),
+                     w, h).multi_address()
+        src = Coord(rng.randrange(8), rng.randrange(8))
+        gen = {k: set(v)
+               for k, v in _fork_tree_cached("xy", mesh, src, ma).items()}
+        assert gen == multicast_fork_tree(mesh, src, ma)
+        srcs = tuple({Coord(rng.randrange(8), rng.randrange(8))
+                      for _ in range(rng.randrange(2, 7))})
+        dst = Coord(rng.randrange(8), rng.randrange(8))
+        gen_j = {k: set(v)
+                 for k, v in _join_tree_cached("xy", mesh, srcs, dst).items()}
+        assert gen_j == reduction_join_tree(mesh, list(srcs), dst)
+
+
+@pytest.mark.parametrize("name", ("yx", "oddeven"))
+def test_generic_fork_trees_are_out_trees_covering_all_destinations(name):
+    rng = random.Random(1)
+    mesh = Mesh2D(8, 8)
+    for _ in range(15):
+        w, h = rng.choice([2, 4]), rng.choice([2, 4])
+        ma = Submesh(rng.randrange(0, 8, w), rng.randrange(0, 8, h),
+                     w, h).multi_address()
+        src = Coord(rng.randrange(8), rng.randrange(8))
+        fork = fork_tree(mesh, src, ma, policy=name)
+        parents: dict[Coord, int] = {}
+        for a, hops in fork.items():
+            for b in hops:
+                if a != b:
+                    parents[b] = parents.get(b, 0) + 1
+        assert all(n == 1 for n in parents.values()), (src, ma, parents)
+        for d in ma.destinations(mesh):
+            assert d in fork and d in fork[d]  # local delivery reachable
+
+
+@pytest.mark.parametrize("name", ("yx", "oddeven"))
+def test_generic_join_trees_are_in_trees_covering_all_sources(name):
+    rng = random.Random(2)
+    mesh = Mesh2D(8, 8)
+    for _ in range(15):
+        srcs = list({Coord(rng.randrange(8), rng.randrange(8))
+                     for _ in range(rng.randrange(2, 8))})
+        dst = Coord(rng.randrange(8), rng.randrange(8))
+        join = join_tree(mesh, srcs, dst, policy=name)
+        outs: dict[Coord, int] = {}
+        for v, ins in join.items():
+            for w in ins:
+                if w != v:
+                    outs[w] = outs.get(w, 0) + 1
+        # every router except the root forwards to exactly one parent
+        assert all(n == 1 for n in outs.values()), (srcs, dst, outs)
+        for s in srcs:
+            assert s in join and s in join[s]  # local contribution present
+
+
+def test_collective_streams_complete_under_every_policy():
+    for name in POLICY_NAMES:
+        p = NoCParams(routing=name)
+        fingerprints = []
+        for engine in ENGINES:
+            sim = NoCSim(Mesh2D(4, 4), p)
+            sim.add_multicast(Coord(1, 2), Submesh(0, 0, 4, 4).multi_address(),
+                              1024)
+            sim.add_reduction([Coord(x, y) for x in range(4) for y in range(2)],
+                              Coord(3, 3), 512)
+            makespan = sim.run(engine=engine)
+            fingerprints.append(
+                (makespan, [s.done_cycle for s in sim.streams]))
+        assert fingerprints[0] == fingerprints[1] == fingerprints[2], name
+
+
+# ---------------------------------------------------------------------------
+# Virtual channels
+# ---------------------------------------------------------------------------
+
+
+def test_vc_of_default_map_and_packet_mode():
+    p1 = NoCParams()
+    assert [p1.vc_of(k) for k in VC_CLASSES] == [0, 0, 0, 0]
+    p2 = NoCParams(num_vcs=2)
+    assert p2.vc_of("unicast") == 0
+    assert p2.vc_of("multicast") == p2.vc_of("reduction") == 1
+    p4 = NoCParams(num_vcs=4)
+    assert [p4.vc_of(k) for k in VC_CLASSES] == [0, 1, 2, 3]
+    pk = NoCParams(num_vcs=2, vc_select="packet")
+    assert [pk.vc_of("unicast", packet_id=i) for i in range(4)] == [0, 1, 0, 1]
+    pm = NoCParams(num_vcs=2, vc_map=(("unicast", 1), ("reduction", 0)))
+    assert pm.vc_of("unicast") == 1 and pm.vc_of("reduction") == 0
+    assert pm.vc_of("multicast") == 1  # unmapped classes fall back to default
+
+
+def test_vc_params_validated():
+    with pytest.raises(ValueError, match="num_vcs"):
+        NoCParams(num_vcs=0)
+    with pytest.raises(ValueError, match="vc_select"):
+        NoCParams(vc_select="random")
+    with pytest.raises(ValueError, match="outside"):
+        NoCParams(num_vcs=2, vc_map=(("unicast", 2),))
+    with pytest.raises(ValueError, match="traffic class"):
+        NoCParams(num_vcs=2, vc_map=(("gossip", 0),))
+    with pytest.raises(ValueError, match="traffic class"):
+        NoCParams().vc_of("gossip")
+
+
+def test_streams_carry_their_class_vc():
+    sim = NoCSim(Mesh2D(4, 4), NoCParams(num_vcs=4))
+    sim.add_unicast(Coord(0, 0), Coord(3, 0), 64)
+    sim.add_multicast(Coord(0, 0), Submesh(0, 0, 4, 1).multi_address(), 64)
+    sim.add_reduction([Coord(0, 0), Coord(1, 0)], Coord(3, 3), 64)
+    assert [s.vc for s in sim.streams] == [0, 1, 2]
+
+
+def test_two_vcs_strictly_relieve_mixed_class_hol_blocking():
+    """The acceptance scenario: a mixed unicast+reduction storm completes
+    strictly earlier with 2 VCs (classes separated) than with 1."""
+    trace = mixed_storm(Mesh2D(8, 8), tile_bytes=4096, unicasts_per_node=4,
+                        rate=1.0, phases=2)
+    m1 = replay(trace, params=P, num_vcs=1).makespan
+    m2 = replay(trace, params=P, num_vcs=2).makespan
+    m4 = replay(trace, params=P, num_vcs=4).makespan
+    assert m2 < m1
+    assert m4 <= m2
+    # and the 1-VC run is bit-identical to the historical default params
+    assert m1 == replay(trace, params=P).makespan
+
+
+def _storm_fingerprint(params: NoCParams, seed: int, engine: str):
+    rng = random.Random(seed)
+    sim = NoCSim(Mesh2D(4, 4), params)
+    for _ in range(rng.randrange(3, 10)):
+        kind = rng.choice(["u", "u", "m", "r"])
+        start = rng.choice([0.0, 5.0, 60.0])
+        nbytes = rng.choice([64, 256, 1024])
+        if kind == "u":
+            a = Coord(rng.randrange(4), rng.randrange(4))
+            b = Coord(rng.randrange(4), rng.randrange(4))
+            if a != b:
+                sim.add_unicast(a, b, nbytes, start=start)
+        elif kind == "m":
+            sim.add_multicast(
+                Coord(rng.randrange(4), rng.randrange(4)),
+                Submesh(0, 0, rng.choice([2, 4]), rng.choice([2, 4])).multi_address(),
+                nbytes, start=start)
+        else:
+            srcs = list({Coord(rng.randrange(4), rng.randrange(4))
+                         for _ in range(rng.randrange(2, 6))})
+            sim.add_reduction(srcs, Coord(rng.randrange(4), rng.randrange(4)),
+                              nbytes, start=start)
+    makespan = sim.run(engine=engine)
+    return (makespan, sim._rr, [s.done_cycle for s in sim.streams],
+            [s.arrivals for s in sim.streams])
+
+
+@pytest.mark.parametrize("routing", POLICY_NAMES)
+@pytest.mark.parametrize("num_vcs", (1, 2, 4))
+def test_three_engines_identical_under_policy_and_vc_configs(routing, num_vcs):
+    params = NoCParams(routing=routing, num_vcs=num_vcs)
+    for seed in range(3):
+        ref = _storm_fingerprint(params, seed, "cycle")
+        for engine in ("event", "heap"):
+            assert _storm_fingerprint(params, seed, engine) == ref, (
+                routing, num_vcs, seed, engine)
+
+
+def test_packet_mode_vcs_engine_equivalent():
+    params = NoCParams(num_vcs=2, vc_select="packet")
+    ref = _storm_fingerprint(params, 11, "cycle")
+    for engine in ("event", "heap"):
+        assert _storm_fingerprint(params, 11, engine) == ref, engine
+
+
+# ---------------------------------------------------------------------------
+# Policy comparison sweeps
+# ---------------------------------------------------------------------------
+
+
+def test_compare_policies_reports_saturation_shift():
+    res = compare_policies(
+        Mesh2D(8, 8), "hotspot", (0.004, 0.013, 0.03),
+        policies=("xy", "o1turn"), vcs=(1, 2), packets_per_node=8,
+        hotspot_frac=0.5,
+    )
+    assert len(res) == 4
+    assert {(r.policy, r.num_vcs) for r in res} == {
+        ("xy", 1), ("xy", 2), ("o1turn", 1), ("o1turn", 2)}
+    assert all(len(r.points) == 3 for r in res)
+    by_key = {(r.policy, r.num_vcs): r for r in res}
+    # routing diversity delays hotspot saturation; packet-sliced VCs too
+    assert by_key[("o1turn", 1)].saturation > by_key[("xy", 1)].saturation
+    assert by_key[("xy", 2)].saturation > by_key[("xy", 1)].saturation
+    shifts = saturation_shifts(res)
+    assert shifts[("xy", 1)] == 1.0
+    assert shifts[("o1turn", 1)] > 1.0
+
+
+def test_saturation_shifts_requires_baseline_row():
+    res = compare_policies(
+        Mesh2D(4, 4), "uniform", (0.01,), policies=("yx",), vcs=(1,),
+        packets_per_node=1,
+    )
+    with pytest.raises(ValueError, match="baseline"):
+        saturation_shifts(res)
+    assert saturation_shifts(res, baseline=("yx", 1)) == {("yx", 1): 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Saturation-aware calibration
+# ---------------------------------------------------------------------------
+
+
+def _curve():
+    """A synthetic sweep curve: linear region then a hard saturation."""
+    mk = lambda r, lat, thr: SweepPoint(  # noqa: E731
+        rate=r, packets=100, mean_latency=lat, max_latency=2 * lat,
+        makespan=1000, throughput=thr)
+    return [
+        mk(0.01, 60.0, 0.01),
+        mk(0.02, 63.0, 0.02),
+        mk(0.04, 70.0, 0.04),
+        mk(0.08, 400.0, 0.05),   # saturated: latency blows up, thr flattens
+    ]
+
+
+def test_load_claims_pass_below_saturation():
+    claims = calibrate.load_claims(_curve(), at_rate=0.02)
+    assert len(claims) == 3
+    assert all(c.ok for c in claims), [(c.name, c.achieved) for c in claims]
+
+
+def test_load_claims_fail_past_saturation():
+    claims = calibrate.load_claims(_curve(), at_rate=0.08)
+    by_name = {c.name.split()[0]: c for c in claims}
+    assert not claims[0].ok          # offered load not below the knee
+    assert not by_name["latency"].ok
+    assert not by_name["throughput"].ok
+    assert "FAIL" in calibrate.report_load(_curve(), 0.08)
+    with pytest.raises(ValueError, match="non-empty"):
+        calibrate.load_claims([], at_rate=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Trace schema v2: routing-stamped round-trip + back-compat
+# ---------------------------------------------------------------------------
+
+
+def test_trace_v2_round_trips_routing_and_vcs():
+    tr = Trace(4, 4, [TrafficEvent("unicast", nbytes=64, src=(0, 0),
+                                   dst=(3, 0))],
+               routing="oddeven", num_vcs=2, vc_select="packet",
+               vc_map=(("unicast", 1),))
+    d = json.loads(tr.to_json())
+    assert d["version"] == 2
+    assert d["routing"] == "oddeven" and d["num_vcs"] == 2
+    assert d["vc_select"] == "packet" and d["vc_map"] == [["unicast", 1]]
+    back = Trace.from_json(tr.to_json())
+    assert back.routing == "oddeven" and back.num_vcs == 2
+    assert back.vc_select == "packet" and back.vc_map == (("unicast", 1),)
+    assert back.to_json() == tr.to_json()
+
+
+def test_versionless_and_v1_traces_load_with_xy_defaults():
+    base = {"cols": 4, "rows": 4,
+            "events": [{"kind": "unicast", "nbytes": 64,
+                        "src": [0, 0], "dst": [3, 0]}]}
+    for d in (base, {**base, "version": 1},
+              {**base, "version": 1, "routing": "oddeven"}):
+        tr = Trace.from_json(json.dumps(d))
+        assert tr.routing is None and tr.num_vcs is None  # v1: no stamp
+    res = replay(Trace.from_json(json.dumps(base)), params=P)
+    # defaults: replays exactly like an explicit XY/1-VC configuration
+    ref = replay(Trace.from_json(json.dumps(base)), params=P,
+                 routing="xy", num_vcs=1)
+    assert res.makespan == ref.makespan
+    with pytest.raises(ValueError, match="version"):
+        Trace.from_json(json.dumps({**base, "version": 3}))
+
+
+def test_recorded_traces_replay_under_their_captured_policy():
+    p = NoCParams(routing="oddeven", num_vcs=2)
+    sim = NoCSim(Mesh2D(4, 4), p)
+    rec = TraceRecorder.attach(sim)
+    sim.add_unicast(Coord(0, 0), Coord(3, 2), 512)
+    sim.add_unicast(Coord(3, 0), Coord(0, 2), 512)
+    sim.add_reduction([Coord(0, 0), Coord(1, 1), Coord(2, 2)], Coord(3, 3), 256)
+    sim.run()
+    assert rec.trace.routing == "oddeven" and rec.trace.num_vcs == 2
+    wire = rec.trace.to_json()
+    got = replay(Trace.from_json(wire), params=NoCParams())
+    want = replay(Trace.from_json(wire),
+                  params=NoCParams(routing="oddeven", num_vcs=2))
+    assert [s.done_cycle for s in got.streams] == \
+           [s.done_cycle for s in want.streams]
+    # explicit replay() arguments override the stamp
+    xy = replay(Trace.from_json(wire), params=NoCParams(), routing="xy",
+                num_vcs=1)
+    ref_xy = replay(dataclasses.replace(Trace.from_json(wire), routing=None,
+                                        num_vcs=None), params=NoCParams())
+    assert [s.done_cycle for s in xy.streams] == \
+           [s.done_cycle for s in ref_xy.streams]
+
+
+def test_num_vcs_override_drops_incompatible_stamped_vc_map():
+    """replay(trace, num_vcs=1) must re-configure a trace captured with
+    a wider explicit vc_map, not crash on the stale stamp."""
+    p = NoCParams(num_vcs=4, vc_map=(("reduction", 3),))
+    sim = NoCSim(Mesh2D(4, 4), p)
+    rec = TraceRecorder.attach(sim)
+    sim.add_unicast(Coord(0, 0), Coord(3, 2), 512)
+    sim.add_reduction([Coord(0, 0), Coord(1, 1)], Coord(3, 3), 256)
+    sim.run()
+    back = Trace.from_json(rec.trace.to_json())
+    assert back.vc_map == (("reduction", 3),)
+    narrowed = replay(back, num_vcs=1)  # must not raise
+    ref = replay(dataclasses.replace(back, routing=None, num_vcs=None,
+                                     vc_select=None, vc_map=None), params=P)
+    assert [s.done_cycle for s in narrowed.streams] == \
+           [s.done_cycle for s in ref.streams]
+    # a compatible stamp still applies under a *wider* explicit override
+    full = replay(back)
+    assert full.makespan == replay(back, num_vcs=4).makespan
+
+
+def test_mixed_storm_validates_rate():
+    with pytest.raises(ValueError, match="rate"):
+        mixed_storm(Mesh2D(4, 4), rate=0.0)
+
+
+def test_packet_mode_recorded_trace_replays_bit_identically():
+    """vc_select/vc_map are part of the stamp: a trace captured under
+    packet-sliced VCs must replay with the exact live-run makespan."""
+    rng = random.Random(3)
+    p = NoCParams(num_vcs=2, vc_select="packet")
+    sim = NoCSim(Mesh2D(4, 4), p)
+    rec = TraceRecorder.attach(sim)
+    for _ in range(24):
+        a = Coord(rng.randrange(4), rng.randrange(4))
+        b = Coord(rng.randrange(4), rng.randrange(4))
+        if a != b:
+            sim.add_unicast(a, b, 512)
+    live = sim.run()
+    back = Trace.from_json(rec.trace.to_json())
+    assert back.vc_select == "packet" and back.num_vcs == 2
+    assert replay(back, params=NoCParams()).makespan == live
