@@ -1,0 +1,186 @@
+"""Collective-program benchmark: comm/compute overlap + shim fidelity.
+
+The trajectory guard for the program IR (the single workload path from
+emitters to engines).  Two properties are measured and gated:
+
+* **Overlap** — a 16x16 SUMMA program with per-tile ``ComputeOp`` nodes
+  (double-buffered deps, see ``summa.summa_program``) must finish
+  strictly earlier under per-op gating (``run_program(mode='op')``) than
+  under the phase-serialized barrier baseline, and no earlier than the
+  ``max(comm-only, compute-only)`` lower bound — the paper's
+  communication-off-the-critical-path claim, reproduced in the contended
+  simulator rather than the analytical models.
+* **Shim fidelity** — the deprecated ``*_noc_events`` / ``*_noc_trace``
+  emitters are thin shims over the program builder; their serialized
+  output must stay bit-identical to the pre-IR generators (sha256
+  fingerprints pinned when the shims were introduced).
+
+Emits ``BENCH_program.json`` at the repo root with the measured
+makespans, overlap ratios, per-op latency percentiles, and the
+fingerprint checks.
+
+Run standalone as a CI gate::
+
+    PYTHONPATH=src python -m benchmarks.bench_program --smoke
+
+exits non-zero if per-op gating fails to beat the barrier baseline (or
+violates the lower bound) on the 8x8 program, or any shim fingerprint
+drifts.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+import warnings
+from pathlib import Path
+
+from repro.core.noc.params import PAPER_MICRO
+from repro.core.noc.program import run_program
+from repro.core.summa import summa_program
+from repro.core.topology import Coord, Mesh2D
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_program.json"
+
+# sha256[:16] of the legacy emitters' serialized output, captured from the
+# pre-IR generators at the commit that introduced the shims.  A drift here
+# means the builder path silently changed workload content.
+GOLDEN_SHIMS = {
+    "broadcast_tree_8": "30f0300af8005a90",
+    "all_reduce_native_8": "ca4737a2f9acc989",
+    "summa4_native": "6fe2d4a63785b259",
+    "summa16_native": "268e6dc06073c22a",
+    "ag_ring_4": "12f987c989d01c17",
+    "rs_ring_4": "a9d580d7236c89be",
+}
+
+
+def _h(s: str) -> str:
+    return hashlib.sha256(s.encode()).hexdigest()[:16]
+
+
+def shim_fingerprints() -> dict[str, str]:
+    """Serialize every deprecated shim's output (warnings suppressed —
+    exercising the shims is this benchmark's job)."""
+    from repro.core import schedules as sched
+    from repro.core.overlap import ag_matmul_noc_trace, matmul_rs_noc_trace
+    from repro.core.summa import summa_noc_trace
+
+    row8 = [Coord(x, 0) for x in range(8)]
+    row4 = [Coord(x, 0) for x in range(4)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        events = lambda evs: json.dumps(  # noqa: E731
+            [e.to_dict() for e in evs], sort_keys=True)
+        return {
+            "broadcast_tree_8": _h(events(sched.broadcast_noc_events(
+                row8, 2, 8192, schedule="tree", chunks=4, params=PAPER_MICRO))),
+            "all_reduce_native_8": _h(events(sched.all_reduce_noc_events(
+                row8, 8192, schedule="native", params=PAPER_MICRO))),
+            "summa4_native": _h(summa_noc_trace(
+                Mesh2D(4, 4), 2048, schedule="native").to_json()),
+            "summa16_native": _h(summa_noc_trace(
+                Mesh2D(16, 16), 2048, schedule="native").to_json()),
+            "ag_ring_4": _h(ag_matmul_noc_trace(
+                Mesh2D(4, 4), row4, 2048).to_json()),
+            "rs_ring_4": _h(matmul_rs_noc_trace(
+                Mesh2D(4, 4), row4, 2048).to_json()),
+        }
+
+
+def overlap_record(side: int, iters: int, tile_bytes: int = 2048,
+                   schedule: str = "native") -> dict:
+    """Measure one SUMMA-with-compute program under all compositions."""
+    mesh = Mesh2D(side, side)
+    prog = summa_program(mesh, tile_bytes, schedule=schedule, iters=iters,
+                         compute_cycles="model")
+    t0 = time.perf_counter()
+    op = run_program(prog, PAPER_MICRO, mode="op")
+    barrier = run_program(prog, PAPER_MICRO, mode="barrier")
+    comm = run_program(prog.comm_only(), PAPER_MICRO, mode="op")
+    comp = run_program(prog.compute_only(), PAPER_MICRO, mode="op")
+    wall = time.perf_counter() - t0
+    stats = op.stats()
+    lower = max(comm.makespan, comp.makespan)
+    return {
+        "mesh": f"{side}x{side}",
+        "schedule": schedule,
+        "iters": iters,
+        "tile_bytes": tile_bytes,
+        "ops": len(prog.ops),
+        "makespan_op": op.makespan,
+        "makespan_barrier": round(barrier.makespan, 1),
+        "makespan_comm_only": comm.makespan,
+        "makespan_compute_only": comp.makespan,
+        "overlap_ratio": round(barrier.makespan / op.makespan, 4),
+        "headroom_vs_lower_bound": round(op.makespan / lower, 4),
+        "op_latency": {
+            "mean": round(stats.mean, 1), "p50": stats.p50,
+            "p95": stats.p95, "p99": stats.p99, "max": stats.max,
+        },
+        "claims": {
+            "op_below_barrier": op.makespan < barrier.makespan,
+            "op_at_least_lower_bound": op.makespan >= lower,
+        },
+        "wall_s": round(wall, 2),
+    }
+
+
+def rows():
+    results = {
+        "overlap": [
+            overlap_record(16, iters=8),
+            overlap_record(16, iters=4, schedule="tree"),
+            overlap_record(8, iters=8),
+        ],
+        "shim_fingerprints": {},
+    }
+    got = shim_fingerprints()
+    results["shim_fingerprints"] = {
+        name: {"sha": sha, "matches_legacy": sha == GOLDEN_SHIMS[name]}
+        for name, sha in got.items()
+    }
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    out = []
+    for rec in results["overlap"]:
+        name = f"summa{rec['mesh']}_{rec['schedule']}_i{rec['iters']}"
+        ok = all(rec["claims"].values())
+        out.append((name, rec["wall_s"] * 1e6,
+                    f"op={rec['makespan_op']};barrier={rec['makespan_barrier']};"
+                    f"overlap_x={rec['overlap_ratio']};bounds_ok={ok}"))
+    n_match = sum(1 for v in results["shim_fingerprints"].values()
+                  if v["matches_legacy"])
+    out.append(("shim_fingerprints", 0.0,
+                f"{n_match}/{len(GOLDEN_SHIMS)}_match_legacy"))
+    return out
+
+
+def smoke() -> int:
+    """CI gate: overlap must pay and the shims must not drift."""
+    rec = overlap_record(8, iters=4)
+    print(json.dumps(rec, indent=2))
+    if not rec["claims"]["op_below_barrier"]:
+        print("FAIL: per-op gating does not beat the barrier baseline")
+        return 1
+    if not rec["claims"]["op_at_least_lower_bound"]:
+        print("FAIL: per-op makespan below the max(comm, compute) bound "
+              "(overlap model is optimistic)")
+        return 1
+    got = shim_fingerprints()
+    bad = [k for k, v in got.items() if v != GOLDEN_SHIMS[k]]
+    if bad:
+        print(f"FAIL: shim output drifted from the legacy emitters: {bad}")
+        return 1
+    print(f"OK: overlap {rec['overlap_ratio']}x over barrier replay, "
+          f">= lower bound; {len(got)} shim fingerprints match legacy")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    for name, us, derived in rows():
+        print(f"{name},{us},{derived}")

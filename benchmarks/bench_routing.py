@@ -5,8 +5,10 @@ across the routing policies (XY / O1TURN / odd-even) and VC counts
 (1 / 2 / 4, packet-sliced) on 8x8 and 16x16 meshes, plus the
 mixed-class collective storm that isolates the head-of-line blocking
 VCs remove.  Emits ``BENCH_routing.json`` at the repo root with the
-saturation point of every configuration and the shift relative to XY —
-the trajectory to regress adaptive-routing work against.
+saturation point of every configuration, its latency curves (mean and
+p50/p95/p99 tails — the knee shows in the tail before the mean moves)
+and the shift relative to XY — the trajectory to regress
+adaptive-routing work against.
 
 Run standalone as a CI gate::
 
@@ -84,6 +86,9 @@ def _sweep_record(pattern: str, side: int, policies=POLICIES, vcs=VCS) -> dict:
                 "num_vcs": r.num_vcs,
                 "saturation": _jsonable(r.saturation),
                 "mean_latency": [round(p.mean_latency, 1) for p in r.points],
+                "p50_latency": [round(p.p50_latency, 1) for p in r.points],
+                "p95_latency": [round(p.p95_latency, 1) for p in r.points],
+                "p99_latency": [round(p.p99_latency, 1) for p in r.points],
                 "throughput": [round(p.throughput, 4) for p in r.points],
                 "shift_vs_xy": _jsonable(shifts[(r.policy, r.num_vcs)]),
             }

@@ -20,6 +20,7 @@ MODULES = [
     ("Traffic", "benchmarks.bench_traffic"),
     ("Engine", "benchmarks.bench_engine"),
     ("Routing", "benchmarks.bench_routing"),
+    ("Program", "benchmarks.bench_program"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

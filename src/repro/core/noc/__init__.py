@@ -36,6 +36,29 @@
                 one beat per (link, VC) per cycle (``NoCParams.num_vcs``,
                 ``vc_map`` / ``vc_select``), which degenerates to the
                 historical whole-link arbitration at ``num_vcs=1``.
+``program``   — collective program IR, the single workload API from
+                emitters to engines:
+                ``program.ops``      typed op nodes (unicast / multicast /
+                                     reduction / barrier / compute) with
+                                     explicit dependency edges; ``Program``
+                                     (trace schema v3 serialization, v1/v2
+                                     loading via phase→barrier-dep
+                                     conversion, lossless Trace round trip,
+                                     comm/compute filters)
+                ``program.builder``  fluent ``ProgramBuilder`` — the target
+                                     of every emitter (``schedules``,
+                                     ``summa``, ``overlap``, storms)
+                ``program.lower``    one lowering pass to engine streams;
+                                     ``run_program`` executes per-op
+                                     dependency gating (``mode='op'``,
+                                     comm/compute overlap via ComputeOp
+                                     timed streams), the legacy
+                                     phase-serialized semantics
+                                     (``mode='barrier'``) or sliding-window
+                                     overlap (``mode='window'``, endpoint
+                                     tiles or policy-aware link footprints);
+                                     per-op completion/latency results with
+                                     percentile stats
 ``traffic``   — traffic engine subsystem:
                 ``traffic.patterns``  seedable synthetic workloads (uniform,
                                       transpose, bit-complement, bit-reversal,
@@ -43,11 +66,15 @@
                                       SUMMA/FCL collective storms
                 ``traffic.trace``     TrafficEvent/Trace serialization, live
                                       TraceRecorder capture, and contended
-                                      replay — phase-barrier serialized or
-                                      sliding-window (``mode='window'``,
-                                      double-buffered SUMMA overlap)
+                                      replay — a thin shim over the program
+                                      IR (phase→barrier-dep conversion +
+                                      ``run_program``), bit-identical to the
+                                      historical phase-barrier and
+                                      sliding-window modes; loads schema
+                                      v1/v2/v3 files
                 ``traffic.sweep``     injection-rate vs. latency/throughput
-                                      saturation curves; ``workers=N`` fans
+                                      saturation curves with p50/p95/p99
+                                      latency tails; ``workers=N`` fans
                                       points over a process pool;
                                       ``compare_policies`` reports the
                                       saturation-point shift per

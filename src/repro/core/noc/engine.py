@@ -46,6 +46,15 @@ reproduces the historical whole-link arbitration exactly:
       ``advance_unit`` frontier cursors; an advance dirties only the unit
       itself and its downstream consumer units, never the full edge walk.
 
+Cross-stream *gates* (``_StreamState.gates``) are the engines' only
+inter-stream dependency mechanism: a gated stream's inject clock starts
+the cycle after its last gate stream drains.  They were introduced for
+sliding-window trace replay and are now the lowering target of the
+program IR's per-op dependency edges (``noc.program.run_program
+(mode='op')``), including the link-free timed streams that ComputeOp /
+BarrierOp nodes lower to — all three engines handle gate release
+identically (``gate_dependents`` + ``gate_released``).
+
 If no pending stream has a finite readiness threshold the network can
 never progress again; all engines raise immediately with a per-stream
 stall report (which streams are stuck, their final-edge frontier beats,

@@ -667,6 +667,30 @@ class NoCSim:
         self.streams.append(st)
         return st
 
+    def add_timed(self, at: Coord, cycles: float, start: float = 0.0):
+        """A link-free timed interval at tile ``at`` (compute / barrier).
+
+        The stream has a single self-edge beat whose inject threshold is
+        ``start + cycles``, so it completes at ``ceil(t0 + start +
+        cycles)`` where ``t0`` is its gate release (0 when ungated).
+        Self-edges never enter link arbitration, so timed streams model
+        tile-local occupancy — the lowering of ``ComputeOp`` /
+        ``BarrierOp`` program nodes — without touching the fabric.  Not
+        recorded by trace recorders (programs serialize as schema v3,
+        which keeps the op form).
+        """
+        e: Edge = (at, at)
+        st = _StreamState(
+            n_beats=1,
+            prereqs={e: []},
+            groups=[[e]],
+            rate={},
+            inject={e: (start + cycles, 0)},
+            finals=[e],
+        )
+        self.streams.append(st)
+        return st
+
     # -- engine -------------------------------------------------------------
 
     def run(self, max_cycles: int = 2_000_000, engine: str = "heap") -> int:

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.core.topology import (
     Coord,
@@ -164,34 +164,26 @@ def _stagger(trace: Trace, interval: float) -> Trace:
     return out
 
 
-def _row_multicast_events(mesh, k, tile_bytes, phase, t0, interval):
+def _row_multicast_ops(b, mesh, k, tile_bytes, phase, t0, interval):
     """SUMMA iteration ``k``: the column-``k`` tile of every row multicasts
-    its A block along the row.  Returns (events, next start offset)."""
+    its A block along the row.  Returns (op ids, next start offset)."""
     out, t = [], t0
     for y in range(mesh.rows):
         ma = Submesh(0, y, mesh.cols, 1).multi_address()
-        out.append(TrafficEvent(
-            "multicast", phase=phase, start=t, nbytes=tile_bytes,
-            src=(k % mesh.cols, y), dst=tuple(ma.dst),
-            x_mask=ma.x_mask, y_mask=ma.y_mask))
+        out.append(b.multicast((k % mesh.cols, y), ma, tile_bytes,
+                               start=t, phase=phase))
         t += interval
     return out, t
 
 
-def _col_reduction_events(mesh, tile_bytes, phase, t0, interval):
+def _col_reduction_ops(b, mesh, tile_bytes, phase, t0, interval):
     """FCL: every column reduces its partial C tiles into its row-0 tile."""
     out, t = [], t0
     for x in range(mesh.cols):
-        out.append(TrafficEvent(
-            "reduction", phase=phase, start=t, nbytes=tile_bytes,
-            dst=(x, 0), sources=tuple((x, y) for y in range(mesh.rows))))
+        out.append(b.reduction([(x, y) for y in range(mesh.rows)], (x, 0),
+                               tile_bytes, start=t, phase=phase))
         t += interval
     return out, t
-
-
-def _barrier_event(mesh, phase) -> TrafficEvent:
-    return TrafficEvent("barrier", phase=phase, dst=(0, 0),
-                        sources=tuple(tuple(c) for c in mesh.coords()))
 
 
 def summa_storm(
@@ -209,14 +201,16 @@ def summa_storm(
     stream starts within a phase (0 = the full concurrent storm).
 
     The events are exactly the native-schedule cost path of
-    ``summa.summa_noc_trace`` (one generator, no drift); this wrapper
-    adds the mesh validation and the injection stagger.
+    ``summa.summa_program`` (one generator, no drift); this wrapper adds
+    the mesh validation, the flat-trace flattening and the injection
+    stagger.
     """
     _check_storm_mesh(mesh)
-    from repro.core.summa import summa_noc_trace
+    from repro.core.summa import summa_program
 
     return _stagger(
-        summa_noc_trace(mesh, tile_bytes, schedule="native", iters=iters),
+        summa_program(mesh, tile_bytes, schedule="native",
+                      iters=iters).to_trace(),
         interval,
     )
 
@@ -234,12 +228,13 @@ def fcl_storm(
     concurrently), then barriers.
     """
     _check_storm_mesh(mesh)
-    trace = Trace(mesh.cols, mesh.rows)
+    from repro.core.noc.program import ProgramBuilder
+
+    b = ProgramBuilder(mesh)
     for ph in range(phases):
-        evs, _ = _col_reduction_events(mesh, tile_bytes, ph, 0.0, interval)
-        trace.events.extend(evs)
-        trace.events.append(_barrier_event(mesh, ph))
-    return trace
+        ids, _ = _col_reduction_ops(b, mesh, tile_bytes, ph, 0.0, interval)
+        b.barrier(phase=ph, deps=ids)
+    return b.build().to_trace()
 
 
 def mixed_storm(
@@ -268,19 +263,21 @@ def mixed_storm(
     injection loop, so the two share one injection model.
     """
     _check_storm_mesh(mesh)
-    trace = Trace(mesh.cols, mesh.rows)
+    from repro.core.noc.program import ProgramBuilder
+
+    b = ProgramBuilder(mesh)
     for ph in range(phases):
-        evs, _ = _col_reduction_events(mesh, tile_bytes, ph, 0.0, 0.0)
-        trace.events.extend(evs)
+        ids, _ = _col_reduction_ops(b, mesh, tile_bytes, ph, 0.0, 0.0)
         background = synthetic_trace(mesh, SyntheticConfig(
             pattern="uniform", rate=rate, nbytes=unicast_bytes,
             packets_per_node=unicasts_per_node, seed=seed + ph,
         ))
-        trace.events.extend(
-            dataclasses.replace(e, phase=ph) for e in background.events
-        )
-        trace.events.append(_barrier_event(mesh, ph))
-    return trace
+        ids += [
+            b.unicast(e.src, e.dst, e.nbytes, start=e.start, phase=ph)
+            for e in background.events
+        ]
+        b.barrier(phase=ph, deps=ids)
+    return b.build().to_trace()
 
 
 def collective_storm(
@@ -296,12 +293,12 @@ def collective_storm(
     mixed collective load the paper's workloads generate concurrently.
     """
     _check_storm_mesh(mesh)
+    from repro.core.noc.program import ProgramBuilder
+
     phases = mesh.cols if phases is None else phases
-    trace = Trace(mesh.cols, mesh.rows)
+    b = ProgramBuilder(mesh)
     for k in range(phases):
-        evs, t = _row_multicast_events(mesh, k, tile_bytes, k, 0.0, interval)
-        trace.events.extend(evs)
-        evs, _ = _col_reduction_events(mesh, tile_bytes, k, t, interval)
-        trace.events.extend(evs)
-        trace.events.append(_barrier_event(mesh, k))
-    return trace
+        ids, t = _row_multicast_ops(b, mesh, k, tile_bytes, k, 0.0, interval)
+        more, _ = _col_reduction_ops(b, mesh, tile_bytes, k, t, interval)
+        b.barrier(phase=k, deps=ids + more)
+    return b.build().to_trace()

@@ -35,15 +35,26 @@ class SweepPoint:
     max_latency: float
     makespan: int             # cycle the last stream completed
     throughput: float         # delivered [beats / node / cycle]
+    # Latency percentiles (nearest-rank, see StreamStats): the knee of a
+    # saturation curve shows up in the tail long before the mean moves,
+    # and a hotspotted victim stream is invisible in mean/max alone.
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    p99_latency: float = 0.0
 
     def csv(self) -> str:
         return (
             f"{self.rate:g},{self.packets},{self.mean_latency:.1f},"
-            f"{self.max_latency:.1f},{self.makespan},{self.throughput:.4f}"
+            f"{self.max_latency:.1f},{self.makespan},{self.throughput:.4f},"
+            f"{self.p50_latency:.1f},{self.p95_latency:.1f},"
+            f"{self.p99_latency:.1f}"
         )
 
 
-CSV_HEADER = "rate,packets,mean_latency,max_latency,makespan,throughput"
+CSV_HEADER = (
+    "rate,packets,mean_latency,max_latency,makespan,throughput,"
+    "p50_latency,p95_latency,p99_latency"
+)
 
 
 def measure(
@@ -58,13 +69,17 @@ def measure(
     res: ReplayResult = replay(trace, params=p, engine=engine)
     beats = sum(p.beats(s.event.nbytes) for s in res.streams)
     makespan = max(res.makespan, 1)
+    stats = res.stats()
     return SweepPoint(
         rate=cfg.rate,
         packets=len(res.streams),
-        mean_latency=res.mean_latency(),
-        max_latency=res.max_latency(),
+        mean_latency=stats.mean,
+        max_latency=stats.max,
         makespan=res.makespan,
         throughput=beats / (makespan * mesh.num_tiles),
+        p50_latency=stats.p50,
+        p95_latency=stats.p95,
+        p99_latency=stats.p99,
     )
 
 

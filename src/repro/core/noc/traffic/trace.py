@@ -20,22 +20,32 @@ Replaying a trace through :func:`replay` runs all phase-concurrent
 streams over the *shared* link fabric, so the resulting completion cycles
 include interference — unlike summing per-collective idle-network model
 times, which is what the paper's microbenchmarks (and the analytical
-models in ``noc/model.py``) report.  Two phase-composition modes exist:
-the default ``mode='barrier'`` fully serializes phases on fabric drain +
-barrier cost, while ``mode='window'`` overlaps them (phase k+1 streams
-inject as soon as the phase-k streams they share tiles with drain —
-double-buffered SUMMA semantics, no global barrier).
+models in ``noc/model.py``) report.  :func:`replay` is a thin shim over
+the collective program IR: the trace is converted to a
+:class:`~repro.core.noc.program.Program` (phase→barrier-dep conversion)
+and executed by :func:`~repro.core.noc.program.run_program`, which owns
+all phase-composition modes — the default ``mode='barrier'`` fully
+serializes phases on fabric drain + barrier cost, ``mode='window'``
+overlaps them (phase k+1 streams inject as soon as the phase-k streams
+whose footprints intersect theirs drain; ``overlap='links'`` gates on
+shared route edges under the configured policy instead of endpoint
+tiles), and programs additionally support exact per-op dependency gating
+(``mode='op'``).  Both trace modes are bit-identical to the historical
+in-module implementations.  Schema v3 files (serialized programs) load
+through :meth:`Trace.from_json` as long as they are flat-trace
+expressible (no compute ops).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional, Sequence
+import math
+from typing import Optional
 
 from repro.core.noc.netsim import NoCSim
 from repro.core.noc.params import NoCParams
-from repro.core.topology import Coord, Mesh2D, MultiAddress
+from repro.core.topology import Mesh2D, MultiAddress
 
 KINDS = ("unicast", "multicast", "reduction", "barrier")
 
@@ -135,6 +145,13 @@ class Trace:
     def from_json(s: str) -> "Trace":
         d = json.loads(s)
         version = d.get("version", 1)  # version-less files predate v1
+        if version == 3:
+            # Schema v3 is a serialized program; flatten it back to a
+            # phase-list trace (raises if it contains compute ops, which
+            # have no flat-trace form — load those via Program.from_json).
+            from repro.core.noc.program import Program
+
+            return Program.from_json(s).to_trace()
         if version not in (1, 2):
             raise ValueError(f"unsupported trace version {version!r}")
         # v1 (and version-less) traces carry no router configuration:
@@ -212,6 +229,42 @@ class TraceRecorder:
         self.trace.events.append(ev)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamStats:
+    """Aggregate latency statistics over a set of streams/ops.
+
+    Percentiles use the nearest-rank method on the sorted latencies, so
+    they are exact sample values (deterministic, no interpolation) —
+    what saturation sweeps and ``BENCH_routing.json`` report alongside
+    the mean that a single hotspotted victim can hide behind.
+    """
+
+    count: int = 0
+    mean: float = 0.0
+    max: float = 0.0
+    p50: float = 0.0
+    p95: float = 0.0
+    p99: float = 0.0
+
+    @staticmethod
+    def of(latencies) -> "StreamStats":
+        lats = sorted(latencies)
+        if not lats:
+            return StreamStats()
+
+        def pct(q: float) -> float:
+            return lats[min(len(lats) - 1, max(0, math.ceil(q * len(lats)) - 1))]
+
+        return StreamStats(
+            count=len(lats),
+            mean=sum(lats) / len(lats),
+            max=lats[-1],
+            p50=pct(0.50),
+            p95=pct(0.95),
+            p99=pct(0.99),
+        )
+
+
 @dataclasses.dataclass
 class StreamResult:
     event: TrafficEvent
@@ -233,74 +286,15 @@ class ReplayResult:
     def latencies(self) -> list[float]:
         return [s.latency for s in self.streams]
 
+    def stats(self) -> StreamStats:
+        return StreamStats.of(self.latencies)
+
     def mean_latency(self) -> float:
         lats = self.latencies
         return sum(lats) / len(lats) if lats else 0.0
 
     def max_latency(self) -> float:
         return max(self.latencies, default=0.0)
-
-
-def _event_nodes(ev: TrafficEvent, mesh: Mesh2D) -> frozenset:
-    """Tiles an event touches (sources, destinations, multicast leaves)."""
-    nodes = set()
-    if ev.src is not None:
-        nodes.add(ev.src)
-    if ev.kind == "multicast":
-        ma = MultiAddress(Coord(*ev.dst), ev.x_mask, ev.y_mask)
-        nodes.update(tuple(c) for c in ma.destinations(mesh))
-    elif ev.dst is not None:
-        nodes.add(ev.dst)
-    nodes.update(ev.sources)
-    return frozenset(nodes)
-
-
-def _add_event(sim: NoCSim, ev: TrafficEvent, start: float):
-    if ev.kind == "unicast":
-        return sim.add_unicast(Coord(*ev.src), Coord(*ev.dst), ev.nbytes, start=start)
-    if ev.kind == "multicast":
-        ma = MultiAddress(Coord(*ev.dst), ev.x_mask, ev.y_mask)
-        return sim.add_multicast(Coord(*ev.src), ma, ev.nbytes, start=start)
-    if ev.kind == "reduction":
-        return sim.add_reduction(
-            [Coord(*s) for s in ev.sources], Coord(*ev.dst), ev.nbytes, start=start
-        )
-    raise ValueError(f"unknown event kind {ev.kind!r}")
-
-
-def _effective_params(
-    trace: Trace,
-    params: NoCParams | None,
-    routing: Optional[str],
-    num_vcs: Optional[int],
-) -> NoCParams:
-    """Router configuration precedence: explicit ``replay`` argument >
-    trace stamp (schema v2) > caller params (defaults: XY, 1 VC).
-
-    The VC selection mode and class map have no explicit ``replay``
-    arguments (they only matter for stamped traces), so the stamp wins
-    over params whenever present — except that a stamped ``vc_map`` is
-    dropped when the effective VC count cannot hold it (an explicit
-    ``num_vcs`` override below the captured count re-configures the
-    trace; classes then fall back to the default map)."""
-    p = params or NoCParams()
-    routing = routing if routing is not None else trace.routing
-    num_vcs = num_vcs if num_vcs is not None else trace.num_vcs
-    updates = {}
-    if routing is not None and routing != p.routing:
-        updates["routing"] = routing
-    if num_vcs is not None and num_vcs != p.num_vcs:
-        updates["num_vcs"] = num_vcs
-    if trace.vc_select is not None and trace.vc_select != p.vc_select:
-        updates["vc_select"] = trace.vc_select
-    effective_vcs = num_vcs if num_vcs is not None else p.num_vcs
-    if (
-        trace.vc_map is not None
-        and trace.vc_map != p.vc_map
-        and all(vc < effective_vcs for _, vc in trace.vc_map)
-    ):
-        updates["vc_map"] = trace.vc_map
-    return dataclasses.replace(p, **updates) if updates else p
 
 
 def replay(
@@ -311,8 +305,16 @@ def replay(
     mode: str = "barrier",
     routing: Optional[str] = None,
     num_vcs: Optional[int] = None,
+    overlap: str = "tiles",
 ) -> ReplayResult:
     """Run a trace through the simulator under shared-fabric contention.
+
+    Thin shim over the collective program IR: the trace converts to a
+    :class:`~repro.core.noc.program.Program` via the phase→barrier-dep
+    conversion and executes through
+    :func:`~repro.core.noc.program.run_program` — the single lowering
+    path from workload description to engine streams.  Results are
+    bit-identical to the historical in-module replay for both modes.
 
     ``mode='barrier'`` (default): phase k+1 starts only after *all* of
     phase k's streams have drained (plus the HW-barrier cost when the
@@ -320,12 +322,11 @@ def replay(
     workload time *with* interference.
 
     ``mode='window'``: sliding-window replay — each phase-k+1 stream is
-    gated only on the phase-k streams whose tile sets overlap its own,
-    and injects as soon as those drain (no global barrier serialization).
-    This models double-buffered SUMMA, where iteration k+1's collectives
-    start per-row/column as soon as the previous iteration's traffic has
-    freed the tiles, and yields a makespan between the fully-serialized
-    barrier replay and the uncontended single-phase lower bound.
+    gated only on the phase-k streams whose footprints overlap its own,
+    and injects as soon as those drain (no global barrier
+    serialization).  ``overlap='tiles'`` (default) gates on shared
+    endpoint tiles; ``overlap='links'`` gates on shared route edges
+    under the effective routing policy (the policy-aware window).
 
     Router configuration: a trace stamped with ``routing`` / ``num_vcs``
     (schema v2, e.g. captured by a :class:`TraceRecorder`) replays under
@@ -333,106 +334,23 @@ def replay(
     it (to re-route a recorded trace under a different policy); both
     fall back to ``params``.
     """
-    p = _effective_params(trace, params, routing, num_vcs)
-    if mode == "window":
-        return _replay_window(trace, p, max_cycles, engine)
-    if mode != "barrier":
-        raise ValueError(f"unknown replay mode {mode!r}")
-    sim = NoCSim(trace.mesh, p)
-    results: list[StreamResult] = []
-    phase_end: list[float] = []
-    offset = 0.0
-    by_phase: dict[int, list[TrafficEvent]] = {}
-    for ev in trace.events:
-        by_phase.setdefault(ev.phase, []).append(ev)
-    for phase in range(trace.num_phases):
-        added: list[tuple[TrafficEvent, object, float]] = []
-        barrier_cost = 0.0
-        for ev in by_phase.get(phase, ()):
-            if ev.kind == "barrier":
-                # The barrier's own fabric cost is the analytical model of
-                # its recorded flavor (its reduction would wipe sim state if
-                # simulated inline); it serializes the phase boundary.
-                fn = p.barrier_sw if ev.flavor == "sw" else p.barrier_hw
-                barrier_cost = max(barrier_cost, fn(len(ev.sources)))
-                continue
-            start = offset + ev.start
-            st = _add_event(sim, ev, start)
-            added.append((ev, st, start))
-        done = sim.run(max_cycles=max_cycles, engine=engine)
-        for ev, st, start in added:
-            results.append(StreamResult(ev, start, st.done_cycle))
-        # max(): a phase that adds no streams (barrier-only, or a gap in
-        # phase numbering) must stack on the accumulated offset — ``done``
-        # alone would rewind it to the last stream completion.
-        offset = max(offset, done) + barrier_cost
-        phase_end.append(offset)
-    makespan = max((r.done_cycle for r in results), default=0)
-    return ReplayResult(makespan=makespan, streams=results, phase_end=phase_end)
+    from repro.core.noc.program import from_trace, run_program
+    from repro.core.noc.program.ops import BarrierOp, op_to_event
 
-
-def _replay_window(
-    trace: Trace,
-    params: NoCParams,  # already routing/VC-effective (see replay)
-    max_cycles: int,
-    engine: str,
-) -> ReplayResult:
-    """Sliding-window replay: one simulation run, cross-phase gating.
-
-    Every non-barrier event becomes a stream up front; each stream
-    carries ``gates`` referencing, per tile it touches, the *most recent*
-    earlier-phase stream that touched that tile, so it injects (at its
-    own intra-phase ``start`` offset) the cycle after the last of those
-    drains.  Tracking the latest toucher — not just the immediately
-    preceding phase — keeps the dependency chain transitive: a phase
-    whose tile set is disjoint from its neighbor cannot let phase k+2
-    overtake still-in-flight phase-k traffic on the same tiles.  Streams
-    of the same phase stay concurrent (they gate on earlier phases only).
-    Barrier events are dropped — the window model is exactly "no global
-    barrier, per-tile double-buffered handoff".  All phases share one
-    ``run()``, so cross-phase contention in the overlap window is fully
-    modeled.
-    """
-    p = params
-    mesh = trace.mesh
-    sim = NoCSim(mesh, p)
-    added: list[tuple[TrafficEvent, object]] = []
-    # tile -> ALL streams of the most recent phase that touched it (a row
-    # multicast and a column reduction of one phase legitimately share a
-    # tile; a later stream must wait for every one of them).
-    last_touch: dict[tuple, list] = {}
-    by_phase: dict[int, list[TrafficEvent]] = {}
-    for ev in trace.events:
-        by_phase.setdefault(ev.phase, []).append(ev)
-    for phase in range(trace.num_phases):
-        cur: list[tuple[frozenset, object]] = []
-        for ev in by_phase.get(phase, ()):
-            if ev.kind == "barrier":
-                continue
-            st = _add_event(sim, ev, ev.start)
-            nodes = _event_nodes(ev, mesh)
-            gates = {}
-            for node in nodes:
-                for g in last_touch.get(node, ()):
-                    gates[id(g)] = g
-            st.gates = list(gates.values())
-            added.append((ev, st))
-            cur.append((nodes, st))
-        cur_touch: dict[tuple, list] = {}
-        for nodes, st in cur:  # same-phase streams do not gate each other
-            for node in nodes:
-                cur_touch.setdefault(node, []).append(st)
-        last_touch.update(cur_touch)
-    sim.run(max_cycles=max_cycles, engine=engine)
-    results = []
-    for ev, st in added:
-        t0 = st._t0() or 0  # gates all drained after a successful run
-        results.append(StreamResult(ev, t0 + ev.start, st.done_cycle))
-    n_phases = trace.num_phases
-    phase_end: list[float] = [0.0] * max(n_phases, 0)
-    for ev, st in added:
-        phase_end[ev.phase] = max(phase_end[ev.phase], st.done_cycle)
-    for k in range(1, n_phases):  # drain times are cumulative across windows
-        phase_end[k] = max(phase_end[k], phase_end[k - 1])
-    makespan = max((r.done_cycle for r in results), default=0)
-    return ReplayResult(makespan=makespan, streams=results, phase_end=phase_end)
+    res = run_program(
+        from_trace(trace), params=params, max_cycles=max_cycles,
+        engine=engine, mode=mode, overlap=overlap, routing=routing,
+        num_vcs=num_vcs,
+    )
+    runs = sorted(
+        (r for r in res.runs if not isinstance(r.op, BarrierOp)),
+        key=lambda r: (r.op.phase, r.op.id),  # legacy phase-major order
+    )
+    return ReplayResult(
+        makespan=res.makespan,
+        streams=[
+            StreamResult(op_to_event(r.op), r.inject_cycle, r.done_cycle)
+            for r in runs
+        ],
+        phase_end=res.phase_end,
+    )

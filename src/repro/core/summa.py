@@ -83,39 +83,135 @@ def _rotate_by(x, axis: str, n: int, shift):
     return out
 
 
-def summa_noc_trace(mesh, tile_bytes: int, schedule: str = "native",
-                    iters: int | None = None, chunks: int = 4, params=None):
-    """NoC cost path: the fabric traffic of a SUMMA run on ``mesh``.
+def summa_compute_cycles(tile_bytes: int, dtype_bytes: int = 8,
+                         params=None) -> float:
+    """Per-iteration tile GEMM time for square ``d x d`` blocks.
 
-    One phase per iteration ``k``: every row's A-block broadcast (root =
-    column ``k``) plus every column's B-block broadcast (root = row
-    ``k``) share the fabric concurrently, then a hardware barrier closes
-    the phase — exactly the traffic the shard_map program above would put
-    on the paper's mesh.  Replay with ``noc.traffic.trace.replay`` to get
-    the contended end-to-end iteration time.
+    ``tile_bytes`` holds ``d^2`` elements of ``dtype_bytes`` each; one
+    SUMMA iteration computes a ``d^3`` MAC sub-problem per tile, costed
+    exactly like ``model.summa_point``:
+    ``d^3 / (gemm_utilization * macs_per_cycle)``.
     """
-    from repro.core.noc.traffic.trace import Trace, TrafficEvent
+    import math
+
+    from repro.core.noc.params import NoCParams
+
+    p = params or NoCParams()
+    d = math.isqrt(max(1, tile_bytes // dtype_bytes))
+    return (d ** 3) / (p.gemm_utilization * p.macs_per_cycle)
+
+
+def summa_program(mesh, tile_bytes: int, schedule: str = "native",
+                  iters: int | None = None, chunks: int = 4, params=None,
+                  compute_cycles: float | str | None = None,
+                  dtype_bytes: int = 8):
+    """The declarative NoC program of a SUMMA run on ``mesh``.
+
+    Without compute (``compute_cycles=None``) this is the pure fabric
+    workload, structured exactly like the historical trace: one phase
+    per iteration ``k`` — every row's A-block broadcast (root = column
+    ``k``) plus every column's B-block broadcast (root = row ``k``)
+    share the fabric concurrently, and a hardware barrier closes the
+    phase.  ``Program.to_trace()`` of this form is bit-identical to the
+    old ``summa_noc_trace`` output.
+
+    With ``compute_cycles`` (a cycle count, or ``"model"`` to derive the
+    tile-GEMM time from :func:`summa_compute_cycles`), every tile gains
+    a :class:`~repro.core.noc.program.ComputeOp` per iteration and the
+    program becomes the **double-buffered** SUMMA pipeline:
+
+    * ``C_k(x, y)`` depends on row-``y``'s A broadcast and column-``x``'s
+      B broadcast of iteration ``k``, and on ``C_{k-1}(x, y)`` (the
+      accumulator);
+    * iteration ``k``'s broadcasts depend on iteration ``k-1``'s (the
+      per-axis DMA order) and on the ``C_{k-2}`` tiles of their row /
+      column — the two-buffer constraint: comm ``k`` refills the buffer
+      compute ``k-2`` read.
+
+    No barrier ops are emitted in this form; phases are stamped ``2k``
+    (comm) / ``2k+1`` (compute) so ``run_program(mode='barrier')`` is
+    the fully-serialized comm→compute baseline, while ``mode='op'``
+    executes the overlap the paper's Section 4.3 scaling rests on.
+    """
+    from repro.core.noc.program import ProgramBuilder
     from repro.core.topology import Coord
 
     if mesh.cols != mesh.rows:
         raise ValueError(f"SUMMA requires a square mesh, got {mesh.cols}x{mesh.rows}")
     iters = mesh.cols if iters is None else iters
-    trace = Trace(mesh.cols, mesh.rows)
-    everyone = tuple(tuple(c) for c in mesh.coords())
+    if compute_cycles == "model":
+        compute_cycles = summa_compute_cycles(tile_bytes, dtype_bytes, params)
+    b = ProgramBuilder(mesh)
+    # None selects the barrier form; any cycle count (0.0 included — an
+    # idealized zero-cost compute still wants the dependency structure)
+    # selects the compute-gated pipeline.
+    with_compute = compute_cycles is not None
+    prev_row: dict[int, list[int]] = {}   # y -> iteration k-1 A-broadcast ops
+    prev_col: dict[int, list[int]] = {}
+    prev_c: dict[tuple[int, int], int] = {}   # tile -> C_{k-1} op
+    prev2_c: dict[tuple[int, int], int] = {}  # tile -> C_{k-2} op
+    fence: list[int] = []                 # previous barrier (no-compute form)
     for k in range(iters):
+        comm_phase = 2 * k if with_compute else k
+        row_ops: dict[int, list[int]] = {}
+        col_ops: dict[int, list[int]] = {}
         for y in range(mesh.rows):  # A_{y,k} multicast along row y
             row = [Coord(x, y) for x in range(mesh.cols)]
-            trace.events.extend(sched.broadcast_noc_events(
-                row, root=k % mesh.cols, nbytes=tile_bytes, schedule=schedule,
-                chunks=chunks, phase=k, params=params))
+            deps = [fence, prev_row.get(y, ())]
+            deps += [prev2_c[(x, y)] for x in range(mesh.cols)
+                     if (x, y) in prev2_c]
+            row_ops[y] = sched.broadcast_ops(
+                b, row, root=k % mesh.cols, nbytes=tile_bytes,
+                schedule=schedule, chunks=chunks, deps=deps,
+                phase=comm_phase, params=params)
         for x in range(mesh.cols):  # B_{k,x} multicast along column x
             col = [Coord(x, y) for y in range(mesh.rows)]
-            trace.events.extend(sched.broadcast_noc_events(
-                col, root=k % mesh.rows, nbytes=tile_bytes, schedule=schedule,
-                chunks=chunks, phase=k, params=params))
-        trace.events.append(
-            TrafficEvent("barrier", phase=k, dst=(0, 0), sources=everyone))
-    return trace
+            deps = [fence, prev_col.get(x, ())]
+            deps += [prev2_c[(x, y)] for y in range(mesh.rows)
+                     if (x, y) in prev2_c]
+            col_ops[x] = sched.broadcast_ops(
+                b, col, root=k % mesh.rows, nbytes=tile_bytes,
+                schedule=schedule, chunks=chunks, deps=deps,
+                phase=comm_phase, params=params)
+        if with_compute:
+            prev2_c = prev_c
+            cur_c: dict[tuple[int, int], int] = {}
+            for x in range(mesh.cols):
+                for y in range(mesh.rows):
+                    deps = [row_ops[y], col_ops[x]]
+                    if (x, y) in prev_c:
+                        deps.append(prev_c[(x, y)])
+                    cur_c[(x, y)] = b.compute(
+                        (x, y), cycles=compute_cycles, deps=deps,
+                        phase=comm_phase + 1)
+            prev_c = cur_c
+        else:
+            # Barrier-form: deps mirror the phase fence so mode='op'
+            # serializes the same way mode='barrier' does (minus the
+            # analytic barrier cost, which the BarrierOp itself carries).
+            fence = [b.barrier(
+                phase=k,
+                deps=[fence, *row_ops.values(), *col_ops.values()])]
+        prev_row, prev_col = row_ops, col_ops
+    return b.build()
+
+
+def summa_noc_trace(mesh, tile_bytes: int, schedule: str = "native",
+                    iters: int | None = None, chunks: int = 4, params=None):
+    """Deprecated shim: the flat-trace form of :func:`summa_program`.
+
+    Bit-identical to the pre-program emitter; migrate to
+    ``summa_program`` (+ ``noc.program.run_program``), which also
+    models the double-buffered compute overlap the trace form cannot.
+    """
+    import warnings
+
+    warnings.warn(
+        "summa_noc_trace is deprecated; build a program with "
+        "summa.summa_program and run it with noc.program.run_program",
+        DeprecationWarning, stacklevel=2)
+    return summa_program(mesh, tile_bytes, schedule=schedule, iters=iters,
+                         chunks=chunks, params=params).to_trace()
 
 
 def summa_sharded(A, B, mesh, row_axis="data", col_axis="model",

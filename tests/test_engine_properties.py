@@ -114,6 +114,68 @@ def test_three_engines_identical_under_random_policy_and_vcs(
     assert fingerprint("heap") == ref
 
 
+_op_draw = st.one_of(
+    st.tuples(st.just("u"), _coord, _coord, _nbytes, _start),
+    st.tuples(
+        st.just("m"), _coord,
+        st.sampled_from([(0, 0, 4, 1), (0, 0, 4, 4), (2, 2, 2, 2)]),
+        _nbytes, _start,
+    ),
+    st.tuples(
+        st.just("r"), st.lists(_coord, min_size=2, max_size=5, unique=True),
+        _coord, _nbytes, _start,
+    ),
+    st.tuples(st.just("c"), _coord,
+              st.sampled_from([0.0, 13.0, 250.5]), _start),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=st.lists(_op_draw, min_size=1, max_size=10),
+    dep_seed=st.integers(0, 2**16),
+)
+def test_program_op_mode_identical_across_engines(ops, dep_seed):
+    """Random op DAGs (comm + compute, random backward deps) must execute
+    identically — per-op inject/done cycles and makespan — under the
+    cycle, event and heap engines in per-op gating mode."""
+    import random as _random
+
+    from repro.core.noc.program import ProgramBuilder, run_program
+    from repro.core.topology import Submesh
+
+    rng = _random.Random(dep_seed)
+    b = ProgramBuilder(Mesh2D(4, 4))
+    ids = []
+    for op in ops:
+        deps = rng.sample(ids, k=min(len(ids), rng.randrange(0, 3)))
+        if op[0] == "u":
+            _, a, d, nbytes, start = op
+            if a == d:
+                continue
+            ids.append(b.unicast(a, d, nbytes, deps=deps, start=start))
+        elif op[0] == "m":
+            _, src, sub, nbytes, start = op
+            ids.append(b.multicast(src, Submesh(*sub).multi_address(),
+                                   nbytes, deps=deps, start=start))
+        elif op[0] == "r":
+            _, srcs, dst, nbytes, start = op
+            ids.append(b.reduction(srcs, dst, nbytes, deps=deps, start=start))
+        else:
+            _, tile, cycles, start = op
+            ids.append(b.compute(tile, cycles=cycles, deps=deps, start=start))
+    prog = b.build()
+
+    def fingerprint(engine):
+        res = run_program(prog, P, mode="op", engine=engine)
+        return (res.makespan,
+                [(r.inject_cycle, r.done_cycle) for r in res.runs])
+
+    ref = fingerprint("cycle")
+    assert fingerprint("event") == ref
+    assert fingerprint("heap") == ref
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     iters=st.integers(2, 4),

@@ -1,0 +1,556 @@
+"""Collective program IR: fidelity to the legacy path + new capabilities.
+
+The IR is the single workload API from emitters to engines, so these
+tests pin two things hard:
+
+* **No silent behavior change** — sha256 fingerprints of every legacy
+  emitter's output and of barrier/window replay results (including
+  v1/v2 trace files) were captured from the pre-IR implementations at
+  the commit that introduced the program path; the shims and the
+  rerouted ``replay()`` must reproduce them bit-for-bit.
+* **The new semantics hold** — per-op dependency gating is
+  engine-identical across cycle/event/heap on random op DAGs, schema v3
+  round-trips losslessly, and the compute-gated SUMMA program lands
+  strictly between the serialized baseline and the
+  max(comm-only, compute-only) lower bound.
+"""
+
+import dataclasses
+import hashlib
+import json
+import random
+
+import pytest
+
+from repro.core import schedules as sched
+from repro.core.noc.params import NoCParams
+from repro.core.noc.program import (
+    BarrierOp,
+    ComputeOp,
+    Program,
+    ProgramBuilder,
+    UnicastOp,
+    from_trace,
+    run_program,
+)
+from repro.core.noc.traffic import (
+    StreamStats,
+    SweepPoint,
+    Trace,
+    TrafficEvent,
+    collective_storm,
+    fcl_storm,
+    mixed_storm,
+    replay,
+    saturation_sweep,
+    summa_storm,
+)
+from repro.core.overlap import ag_matmul_noc_trace, matmul_rs_noc_trace
+from repro.core.summa import summa_noc_trace, summa_program
+from repro.core.topology import Coord, Mesh2D, Submesh
+
+P = NoCParams()
+ENGINES = ("cycle", "event", "heap")
+
+
+def _h(s: str) -> str:
+    return hashlib.sha256(s.encode()).hexdigest()[:16]
+
+
+def _events_json(evs) -> str:
+    return json.dumps([e.to_dict() for e in evs], sort_keys=True)
+
+
+def _replay_fp(res) -> str:
+    return _h(json.dumps(
+        [res.makespan, [s.done_cycle for s in res.streams],
+         [round(s.inject_cycle, 6) for s in res.streams], res.phase_end]))
+
+
+# ---------------------------------------------------------------------------
+# Golden fingerprints, captured from the pre-program implementations.
+# ---------------------------------------------------------------------------
+
+GOLDEN_EMITTERS = {
+    "broadcast_native": "9d845029befe936b",
+    "broadcast_chain": "1485a1d1386b160c",
+    "broadcast_pipelined": "87f2e6d2f0b462be",
+    "broadcast_tree": "30f0300af8005a90",
+    "all_reduce_native": "ca4737a2f9acc989",
+    "all_reduce_chain": "ff328f3c872e07aa",
+    "all_reduce_pipelined": "2544616bef2344db",
+    "all_reduce_tree": "092ab212d9f07daa",
+}
+GOLDEN_TRACES = {
+    "summa4_native": "6fe2d4a63785b259",
+    "summa4_tree": "4941198248634659",
+    "summa16_native": "268e6dc06073c22a",
+    "ag_ring": "12f987c989d01c17",
+    "rs_ring": "a9d580d7236c89be",
+    "summa_storm8": "ee76b3f5198e7f00",
+    "fcl_storm8": "b8146120406afcd8",
+    "mixed_storm8": "6b9c41a50739c6a9",
+    "collective_storm8": "a89a33ad6d48afbb",
+}
+GOLDEN_REPLAYS = {
+    "replay_summa4_barrier": "1e9ebca967b21cc4",
+    "replay_summa4_window": "4231c469be043f3c",
+    "replay_gap_barrier": "e52f958030774b90",
+    "replay_gap_window": "2f5e70d586315197",
+}
+
+
+@pytest.mark.parametrize("schedule", ("native", "chain", "pipelined", "tree"))
+def test_schedule_shims_bit_identical_and_deprecated(schedule):
+    row8 = [Coord(x, 0) for x in range(8)]
+    with pytest.deprecated_call():
+        bc = sched.broadcast_noc_events(row8, 2, 8192, schedule=schedule,
+                                        chunks=4, params=P)
+    with pytest.deprecated_call():
+        ar = sched.all_reduce_noc_events(row8, 8192, schedule=schedule,
+                                         params=P)
+    assert _h(_events_json(bc)) == GOLDEN_EMITTERS[f"broadcast_{schedule}"]
+    assert _h(_events_json(ar)) == GOLDEN_EMITTERS[f"all_reduce_{schedule}"]
+
+
+def test_trace_shims_bit_identical_and_deprecated():
+    row4 = [Coord(x, 0) for x in range(4)]
+    with pytest.deprecated_call():
+        t = summa_noc_trace(Mesh2D(4, 4), 2048, schedule="native")
+    assert _h(t.to_json()) == GOLDEN_TRACES["summa4_native"]
+    with pytest.deprecated_call():
+        t = summa_noc_trace(Mesh2D(4, 4), 2048, schedule="tree")
+    assert _h(t.to_json()) == GOLDEN_TRACES["summa4_tree"]
+    with pytest.deprecated_call():
+        t = summa_noc_trace(Mesh2D(16, 16), 2048, schedule="native")
+    assert _h(t.to_json()) == GOLDEN_TRACES["summa16_native"]
+    with pytest.deprecated_call():
+        t = ag_matmul_noc_trace(Mesh2D(4, 4), row4, 2048)
+    assert _h(t.to_json()) == GOLDEN_TRACES["ag_ring"]
+    with pytest.deprecated_call():
+        t = matmul_rs_noc_trace(Mesh2D(4, 4), row4, 2048)
+    assert _h(t.to_json()) == GOLDEN_TRACES["rs_ring"]
+
+
+def test_bench_program_goldens_agree_with_test_goldens():
+    """bench_program's --smoke gate and this file pin the same legacy
+    fingerprints; a regeneration that updates one table but not the
+    other must fail here, not diverge silently."""
+    bench = pytest.importorskip("benchmarks.bench_program")
+    shared = {
+        "broadcast_tree_8": GOLDEN_EMITTERS["broadcast_tree"],
+        "all_reduce_native_8": GOLDEN_EMITTERS["all_reduce_native"],
+        "summa4_native": GOLDEN_TRACES["summa4_native"],
+        "summa16_native": GOLDEN_TRACES["summa16_native"],
+        "ag_ring_4": GOLDEN_TRACES["ag_ring"],
+        "rs_ring_4": GOLDEN_TRACES["rs_ring"],
+    }
+    assert bench.GOLDEN_SHIMS == shared
+
+
+def test_builder_built_storms_bit_identical():
+    m8 = Mesh2D(8, 8)
+    assert _h(summa_storm(m8, tile_bytes=2048, iters=2, interval=3.0)
+              .to_json()) == GOLDEN_TRACES["summa_storm8"]
+    assert _h(fcl_storm(m8, tile_bytes=1024, phases=2)
+              .to_json()) == GOLDEN_TRACES["fcl_storm8"]
+    assert _h(mixed_storm(m8, phases=2).to_json()) == \
+        GOLDEN_TRACES["mixed_storm8"]
+    assert _h(collective_storm(m8, tile_bytes=2048, phases=2)
+              .to_json()) == GOLDEN_TRACES["collective_storm8"]
+
+
+def _summa4_trace() -> Trace:
+    return summa_program(Mesh2D(4, 4), 2048, schedule="native").to_trace()
+
+
+def _gap_trace() -> Trace:
+    """Mixed kinds, sw+hw barriers, a phase-numbering gap."""
+    return Trace(4, 4, [
+        TrafficEvent("unicast", phase=0, nbytes=1024, src=(0, 0), dst=(3, 0)),
+        TrafficEvent("barrier", phase=0, dst=(0, 0), flavor="sw",
+                     sources=tuple((x, 0) for x in range(4))),
+        TrafficEvent("barrier", phase=1, dst=(0, 0),
+                     sources=tuple((x, 0) for x in range(4))),
+        TrafficEvent("multicast", phase=3, nbytes=2048, src=(1, 1), dst=(0, 0),
+                     x_mask=3, y_mask=3, start=2.5),
+        TrafficEvent("reduction", phase=3, nbytes=512, dst=(2, 2),
+                     sources=((0, 0), (1, 2), (3, 3))),
+    ])
+
+
+def test_replay_through_program_path_bit_identical():
+    for name, trace in (("summa4", _summa4_trace()), ("gap", _gap_trace())):
+        for mode in ("barrier", "window"):
+            fp = _replay_fp(replay(trace, params=P, mode=mode))
+            assert fp == GOLDEN_REPLAYS[f"replay_{name}_{mode}"], (name, mode)
+
+
+def test_v1_v2_files_replay_fingerprint_identical():
+    tr = _summa4_trace()
+    v1 = json.loads(tr.to_json())
+    del v1["version"]
+    for k in ("routing", "num_vcs", "vc_select", "vc_map"):
+        v1.pop(k, None)
+    r = replay(Trace.from_json(json.dumps(v1)), params=P)
+    assert _h(json.dumps([r.makespan, [s.done_cycle for s in r.streams],
+                          r.phase_end])) == "59b69638fa272cdd"
+    t2 = summa_program(Mesh2D(4, 4), 2048, schedule="tree").to_trace()
+    t2.routing, t2.num_vcs, t2.vc_select = "o1turn", 2, "packet"
+    r = replay(Trace.from_json(t2.to_json()), params=P)
+    assert _h(json.dumps([r.makespan, [s.done_cycle for s in r.streams],
+                          r.phase_end])) == "42c80200a295e7aa"
+
+
+# ---------------------------------------------------------------------------
+# Schema v3 round trip + trace interop
+# ---------------------------------------------------------------------------
+
+
+def _sample_program() -> Program:
+    b = ProgramBuilder(Mesh2D(4, 4), routing="o1turn", num_vcs=2,
+                       vc_select="packet", vc_map=(("unicast", 1),))
+    ma = Submesh(0, 0, 4, 1).multi_address()
+    m0 = b.multicast((0, 0), ma, 2048)
+    r0 = b.reduction([(x, 3) for x in range(4)], (0, 3), 1024, deps=m0)
+    c0 = b.compute((3, 0), cycles=500.0, deps=[m0], start=2.0)
+    b.barrier([(0, 0), (3, 0)], flavor="sw", deps=[r0, c0])
+    b.unicast((1, 1), (2, 2), 64, phase=5)
+    return b.build()
+
+
+def test_program_json_v3_round_trip_lossless():
+    prog = _sample_program()
+    back = Program.from_json(prog.to_json())
+    assert back.ops == prog.ops
+    assert (back.cols, back.rows) == (prog.cols, prog.rows)
+    assert (back.routing, back.num_vcs, back.vc_select, back.vc_map) == \
+        ("o1turn", 2, "packet", (("unicast", 1),))
+    assert json.loads(back.to_json())["version"] == 3
+
+
+def test_program_from_json_accepts_v1_v2():
+    tr = _summa4_trace()
+    prog = Program.from_json(tr.to_json())           # v2
+    assert prog.to_trace().to_json() == tr.to_json()
+    v1 = json.loads(tr.to_json())
+    del v1["version"]
+    assert len(Program.from_json(json.dumps(v1)).ops) == len(tr.events)
+
+
+def test_trace_from_json_accepts_v3_when_flat_expressible():
+    prog = from_trace(_summa4_trace())
+    tr = Trace.from_json(prog.to_json())
+    assert tr.to_json() == _summa4_trace().to_json()
+    # ... but a program with compute ops has no flat-trace form
+    b = ProgramBuilder(Mesh2D(2, 2))
+    b.compute((0, 0), cycles=10.0)
+    with pytest.raises(ValueError, match="compute"):
+        Trace.from_json(b.build().to_json())
+    # ... and same-phase dependency edges (e.g. the causal all-reduce
+    # form, or _sample_program's reduction gated on its multicast) are
+    # rejected rather than silently flattened into concurrency
+    with pytest.raises(ValueError, match="same-phase"):
+        Trace.from_json(_sample_program().to_json())
+    with pytest.raises(ValueError, match="same-phase"):
+        _sample_program().to_trace()
+
+
+def test_from_trace_to_trace_round_trip():
+    for trace in (_summa4_trace(), _gap_trace(),
+                  mixed_storm(Mesh2D(4, 4), phases=1)):
+        assert from_trace(trace).to_trace().to_json() == trace.to_json()
+
+
+def test_from_trace_wires_phase_fence_deps():
+    prog = from_trace(_gap_trace())
+    kinds = [op.kind for op in prog.ops]
+    assert kinds == ["unicast", "barrier", "barrier", "multicast", "reduction"]
+    assert prog.ops[0].deps == ()
+    assert prog.ops[1].deps == (0,)       # phase-0 barrier fences its unicast
+    assert prog.ops[2].deps == (1,)       # barrier chain across phases
+    assert prog.ops[3].deps == (2,)       # phase-3 ops gate on the last fence
+    assert prog.ops[4].deps == (2,)
+
+
+# ---------------------------------------------------------------------------
+# Per-op execution: engine equivalence on random DAGs
+# ---------------------------------------------------------------------------
+
+
+def _random_program(seed: int) -> Program:
+    rng = random.Random(seed)
+    mesh = Mesh2D(4, 4)
+    b = ProgramBuilder(mesh)
+    ids: list[int] = []
+    for _ in range(rng.randrange(2, 14)):
+        deps = rng.sample(ids, k=min(len(ids), rng.randrange(0, 3)))
+        start = rng.choice([0.0, 1.5, 30.0]) * rng.random()
+        kind = rng.choice(["u", "m", "r", "c"])
+        if kind == "u":
+            a = (rng.randrange(4), rng.randrange(4))
+            d = (rng.randrange(4), rng.randrange(4))
+            if a == d:
+                continue
+            ids.append(b.unicast(a, d, rng.choice([64, 1024]), deps=deps,
+                                 start=start))
+        elif kind == "m":
+            w, h = rng.choice([1, 2, 4]), rng.choice([1, 2])
+            sub = Submesh(rng.randrange(0, 4, w), rng.randrange(0, 4, h), w, h)
+            ids.append(b.multicast((rng.randrange(4), rng.randrange(4)),
+                                   sub.multi_address(), 512, deps=deps,
+                                   start=start))
+        elif kind == "r":
+            srcs = list({(rng.randrange(4), rng.randrange(4))
+                         for _ in range(rng.randrange(2, 5))})
+            ids.append(b.reduction(srcs, (rng.randrange(4), rng.randrange(4)),
+                                   256, deps=deps, start=start))
+        else:
+            ids.append(b.compute((rng.randrange(4), rng.randrange(4)),
+                                 cycles=rng.choice([0.0, 17.0, 150.5]),
+                                 deps=deps, start=start))
+    return b.build()
+
+
+def _op_fingerprint(prog: Program, engine: str):
+    res = run_program(prog, P, mode="op", engine=engine)
+    return (res.makespan,
+            [(r.inject_cycle, r.done_cycle) for r in res.runs])
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_op_mode_engine_fingerprints_identical(seed):
+    prog = _random_program(seed)
+    ref = _op_fingerprint(prog, "cycle")
+    for engine in ("event", "heap"):
+        assert _op_fingerprint(prog, engine) == ref, engine
+
+
+def test_op_mode_respects_deps_and_start_offsets():
+    b = ProgramBuilder(Mesh2D(4, 1))
+    u0 = b.unicast((0, 0), (3, 0), 1024)
+    c0 = b.compute((3, 0), cycles=100.0, deps=u0)
+    u1 = b.unicast((3, 0), (0, 0), 1024, deps=c0, start=7.0)
+    res = run_program(b.build(), P, mode="op")
+    r0, rc, r1 = res.runs
+    assert rc.inject_cycle == r0.done_cycle + 1
+    assert rc.done_cycle == rc.inject_cycle + 100
+    assert r1.inject_cycle == rc.done_cycle + 1 + 7.0
+    assert res.makespan == r1.done_cycle
+    assert res.run_of(u1).done_cycle == r1.done_cycle
+    # a lone compute op with no deps completes at ceil(start + cycles)
+    b2 = ProgramBuilder(Mesh2D(2, 2))
+    b2.compute((1, 1), cycles=10.5, start=1.0)
+    assert run_program(b2.build(), P, mode="op").makespan == 12
+
+
+def test_empty_program_and_mode_validation():
+    prog = ProgramBuilder(Mesh2D(2, 2)).build()
+    for mode in ("op", "barrier", "window"):
+        assert run_program(prog, P, mode=mode).makespan == 0
+    with pytest.raises(ValueError, match="unknown replay mode"):
+        run_program(prog, P, mode="bogus")
+    with pytest.raises(ValueError, match="unknown overlap"):
+        run_program(prog, P, mode="window", overlap="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Compute-gated overlap bounds (the headline acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", ("native", "tree"))
+def test_summa_compute_program_overlap_bounds(schedule):
+    prog = summa_program(Mesh2D(4, 4), 2048, schedule=schedule, iters=3,
+                         compute_cycles="model")
+    assert any(isinstance(op, ComputeOp) for op in prog.ops)
+    op = run_program(prog, P, mode="op")
+    barrier = run_program(prog, P, mode="barrier")
+    comm = run_program(prog.comm_only(), P, mode="op")
+    comp = run_program(prog.compute_only(), P, mode="op")
+    assert op.makespan < barrier.makespan          # overlap strictly pays
+    assert op.makespan >= max(comm.makespan, comp.makespan)
+
+
+def test_summa_program_without_compute_matches_legacy_trace():
+    prog = summa_program(Mesh2D(4, 4), 2048, schedule="native")
+    assert not any(isinstance(op, ComputeOp) for op in prog.ops)
+    res_prog = run_program(prog, P, mode="barrier")
+    res_replay = replay(prog.to_trace(), params=P)
+    assert res_prog.makespan == res_replay.makespan
+    assert res_prog.phase_end == res_replay.phase_end
+
+
+def test_filter_rewires_deps_transitively():
+    b = ProgramBuilder(Mesh2D(4, 1))
+    u0 = b.unicast((0, 0), (1, 0), 64)
+    c0 = b.compute((1, 0), cycles=10.0, deps=u0)
+    u1 = b.unicast((1, 0), (2, 0), 64, deps=c0)
+    c1 = b.compute((2, 0), cycles=10.0, deps=u1)
+    b.unicast((2, 0), (3, 0), 64, deps=c1)
+    comm = b.build().comm_only()
+    assert [op.kind for op in comm.ops] == ["unicast"] * 3
+    assert [op.deps for op in comm.ops] == [(), (0,), (1,)]
+    comp = b.build().compute_only()
+    assert [op.deps for op in comp.ops] == [(), (0,)]
+    comm.validate()
+    comp.validate()
+
+
+# ---------------------------------------------------------------------------
+# Policy-aware window gating (overlap='links')
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ("xy", "o1turn"))
+def test_window_links_overlap_bounded_and_engine_identical(routing):
+    trace = summa_storm(Mesh2D(4, 4), tile_bytes=1024, iters=3)
+    params = dataclasses.replace(P, routing=routing)
+    barrier = replay(trace, params=params)
+    links = replay(trace, params=params, mode="window", overlap="links")
+    assert links.makespan <= barrier.makespan
+    solo = Trace(4, 4, [dataclasses.replace(e, phase=0)
+                        for e in trace.events
+                        if e.phase == 0 and e.kind != "barrier"])
+    assert links.makespan >= replay(solo, params=params).makespan
+    ref = replay(trace, params=params, mode="window", overlap="links",
+                 engine="cycle")
+    assert [s.done_cycle for s in links.streams] == \
+        [s.done_cycle for s in ref.streams]
+
+
+def test_window_links_gates_on_route_sharing_not_tiles():
+    """Two streams that share a tile but no route edge: tile gating
+    serializes them, link gating lets phase 1 inject immediately."""
+    tr = Trace(3, 3, [
+        # phase 0: unicast ending at (1, 1)
+        TrafficEvent("unicast", phase=0, nbytes=4096, src=(1, 0), dst=(1, 1)),
+        # phase 1: unicast starting at (1, 1), leaving on a different link
+        TrafficEvent("unicast", phase=1, nbytes=4096, src=(1, 1), dst=(2, 1)),
+    ])
+    tiles = replay(tr, params=P, mode="window")
+    links = replay(tr, params=P, mode="window", overlap="links")
+    # tile mode gates phase 1 on phase 0's drain; link mode does not
+    # (disjoint links), so its second stream injects at cycle 0 and
+    # finishes strictly earlier.
+    assert links.streams[1].inject_cycle == 0.0
+    assert tiles.streams[1].inject_cycle > 0.0
+    assert links.makespan < tiles.makespan
+
+
+# ---------------------------------------------------------------------------
+# Stats satellites: StreamStats percentiles + sweep surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_stream_stats_percentiles_nearest_rank():
+    lats = list(range(1, 101))            # 1..100
+    st = StreamStats.of(lats)
+    assert (st.count, st.mean, st.max) == (100, 50.5, 100)
+    assert (st.p50, st.p95, st.p99) == (50, 95, 99)
+    st = StreamStats.of([7.0])
+    assert (st.p50, st.p95, st.p99, st.max) == (7.0, 7.0, 7.0, 7.0)
+    assert StreamStats.of([]) == StreamStats()
+
+
+def test_replay_and_program_results_carry_stats():
+    res = replay(fcl_storm(Mesh2D(4, 4), tile_bytes=1024, phases=2), params=P)
+    st = res.stats()
+    assert st.count == len(res.streams)
+    assert st.mean == pytest.approx(res.mean_latency())
+    assert st.p50 <= st.p95 <= st.p99 <= st.max == res.max_latency()
+    prog = summa_program(Mesh2D(4, 4), 1024, iters=2, compute_cycles=64.0)
+    pst = run_program(prog, P, mode="op").stats()
+    assert pst.count == len(prog.ops)
+    assert 0 < pst.p50 <= pst.p99 <= pst.max
+
+
+def test_sweep_points_surface_percentiles():
+    pts = saturation_sweep(Mesh2D(4, 4), "uniform", (0.05, 0.2), nbytes=256,
+                           packets_per_node=3, seed=1, params=P)
+    for pt in pts:
+        assert 0 < pt.p50_latency <= pt.p95_latency <= pt.p99_latency \
+            <= pt.max_latency
+        row = pt.csv().split(",")
+        assert len(row) == 9
+        assert float(row[6]) == round(pt.p50_latency, 1)
+    # keyword construction with defaulted percentiles stays valid
+    assert SweepPoint(rate=0.1, packets=1, mean_latency=1.0, max_latency=2.0,
+                      makespan=3, throughput=0.1).p99_latency == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Builder / Program validation
+# ---------------------------------------------------------------------------
+
+
+def test_native_all_reduce_deps_form_is_causal_under_contention():
+    """pipeline='deps' (default): the result multicast cannot complete
+    before its reduction under op-mode gating, even when background
+    traffic congests the reduction fan-in; pipeline='offsets' keeps the
+    legacy analytic stagger (and its optimism) for the flat-trace form."""
+    mesh = Mesh2D(4, 4)
+    row = [Coord(x, 0) for x in range(4)]
+
+    def build(pipeline):
+        b = ProgramBuilder(mesh)
+        ids = sched.all_reduce_ops(b, row, nbytes=2048, schedule="native",
+                                   params=P, pipeline=pipeline)
+        for y in range(1, 4):  # congest the row-0 fan-in links
+            for x in range(3):
+                b.unicast((x, y), (3, 0), 8192)
+        return b.build(), ids
+
+    prog, (red, mc) = build("deps")
+    res = run_program(prog, P, mode="op")
+    assert res.run_of(mc).inject_cycle == res.run_of(red).done_cycle + 1
+    assert res.run_of(mc).done_cycle > res.run_of(red).done_cycle
+    prog_off, (red, mc) = build("offsets")
+    off = run_program(prog_off, P, mode="op")
+    assert off.run_of(mc).op.start > 0.0  # analytic stagger, no dep edge
+    assert prog_off.ops[mc].deps == ()
+    with pytest.raises(ValueError, match="pipeline"):
+        build("bogus")
+
+
+def test_window_mode_run_of_is_id_keyed_despite_dropped_barriers():
+    res = run_program(from_trace(_gap_trace()), P, mode="window")
+    assert [r.op.id for r in res.runs] == [0, 3, 4]  # barriers 1, 2 dropped
+    assert res.run_of(3).op.kind == "multicast"
+    assert res.run_of(4).op.kind == "reduction"
+    with pytest.raises(KeyError):
+        res.run_of(1)
+
+
+def test_builder_and_program_validation_errors():
+    b = ProgramBuilder(Mesh2D(2, 2))
+    with pytest.raises(ValueError, match="cycles=/flops="):
+        b.compute((0, 0))
+    with pytest.raises(ValueError, match="cycles=/flops="):
+        b.compute((0, 0), cycles=1.0, flops=2.0)
+    bad = Program(2, 2, [UnicastOp(id=0, deps=(0,), src=(0, 0), dst=(1, 1),
+                                   nbytes=64)])
+    with pytest.raises(ValueError, match="earlier"):
+        bad.validate()
+    off = Program(2, 2, [UnicastOp(id=0, src=(0, 0), dst=(5, 5), nbytes=64)])
+    with pytest.raises(ValueError, match="outside"):
+        off.validate()
+    seq = Program(2, 2, [UnicastOp(id=1, src=(0, 0), dst=(1, 1), nbytes=64)])
+    with pytest.raises(ValueError, match="sequential"):
+        seq.validate()
+
+
+def test_builder_compute_flops_uses_model_terms():
+    b = ProgramBuilder(Mesh2D(2, 2), params=P)
+    b.compute((0, 0), flops=2.0 * 4096)
+    cycles = b.build().ops[0].cycles
+    assert cycles == pytest.approx(4096 / (P.gemm_utilization * P.macs_per_cycle))
+
+
+def test_barrier_op_cost_mirrors_flavor_models():
+    sw = BarrierOp(id=0, participants=tuple((x, 0) for x in range(8)),
+                   flavor="sw")
+    hw = BarrierOp(id=0, participants=tuple((x, 0) for x in range(8)))
+    assert sw.cost(P) == pytest.approx(P.barrier_sw(8))
+    assert hw.cost(P) == pytest.approx(P.barrier_hw(8))
+    assert sw.cost(P) > hw.cost(P)

@@ -440,6 +440,10 @@ def test_versionless_and_v1_traces_load_with_xy_defaults():
                  routing="xy", num_vcs=1)
     assert res.makespan == ref.makespan
     with pytest.raises(ValueError, match="version"):
+        Trace.from_json(json.dumps({**base, "version": 4}))
+    # v3 is the program schema: a flat 'events' file mislabeled as v3 is
+    # rejected with a pointer at the right schema, not a KeyError.
+    with pytest.raises(ValueError, match="ops"):
         Trace.from_json(json.dumps({**base, "version": 3}))
 
 

@@ -345,19 +345,24 @@ def test_sw_barrier_flavor_survives_capture_and_costs_more():
 
 
 def test_schedule_cost_paths_native_beats_software():
+    # The *_noc_events emitters are deprecated shims over the program
+    # builder; this keeps exercising them (bit-identity is pinned by
+    # fingerprints in test_program.py) without leaking warnings.
     from repro.core import schedules as sched
 
     row = [Coord(x, 0) for x in range(8)]
     mk = lambda evs: Trace(8, 8, list(evs))  # noqa: E731
     times = {}
-    for s in ("native", "chain", "tree"):
-        times[s] = replay(mk(sched.broadcast_noc_events(
-            row, 0, 8192, schedule=s, params=P)), params=P).makespan
+    with pytest.deprecated_call():
+        for s in ("native", "chain", "tree"):
+            times[s] = replay(mk(sched.broadcast_noc_events(
+                row, 0, 8192, schedule=s, params=P)), params=P).makespan
     assert times["native"] < times["tree"] < times["chain"]
     red = {}
-    for s in ("native", "tree"):
-        red[s] = replay(mk(sched.all_reduce_noc_events(
-            row, 8192, schedule=s, params=P)), params=P).makespan
+    with pytest.deprecated_call():
+        for s in ("native", "tree"):
+            red[s] = replay(mk(sched.all_reduce_noc_events(
+                row, 8192, schedule=s, params=P)), params=P).makespan
     assert red["native"] < red["tree"]
 
 
@@ -365,8 +370,9 @@ def test_summa_noc_trace_contended_replay():
     from repro.core.summa import summa_noc_trace
 
     mesh = Mesh2D(4, 4)
-    hw = replay(summa_noc_trace(mesh, 2048, schedule="native"), params=P)
-    sw = replay(summa_noc_trace(mesh, 2048, schedule="tree"), params=P)
+    with pytest.deprecated_call():
+        hw = replay(summa_noc_trace(mesh, 2048, schedule="native"), params=P)
+        sw = replay(summa_noc_trace(mesh, 2048, schedule="tree"), params=P)
     assert hw.makespan < sw.makespan
     assert hw.phase_end == sorted(hw.phase_end)
 
@@ -376,7 +382,8 @@ def test_overlap_ring_traces_replay():
 
     mesh = Mesh2D(4, 4)
     row = [Coord(x, 0) for x in range(4)]
-    ag = replay(ag_matmul_noc_trace(mesh, row, 2048), params=P)
-    rs = replay(matmul_rs_noc_trace(mesh, row, 2048), params=P)
+    with pytest.deprecated_call():
+        ag = replay(ag_matmul_noc_trace(mesh, row, 2048), params=P)
+        rs = replay(matmul_rs_noc_trace(mesh, row, 2048), params=P)
     # bidirectional ring: half the sequential phases of the unidirectional
     assert ag.makespan < rs.makespan
