@@ -1,23 +1,36 @@
-"""Engine shoot-out: cycle vs event vs heap wall-clock, storm + sweep.
+"""Engine shoot-out: cycle vs event vs heap vs shard, storm + sweep.
 
-The perf trajectory guard for the simulator hot path.  Times the three
-bit-identical engines on collective storms (8x8/16x16/32x32) and
-injection-rate sweeps, checks the results agree, and emits
-``BENCH_engine.json`` at the repo root so future PRs have a baseline to
-regress against.  The 64x64 row demonstrates the regime the heap engine
-newly opens: a full injection-rate curve in seconds.
+The perf trajectory guard for the simulator hot path.  Times the
+bit-identical engines on collective storms (8x8 .. 64x64), checks the
+results agree, and emits ``BENCH_engine.json`` at the repo root so
+future PRs have a baseline to regress against.
+
+New rows in this revision:
+
+* ``storm64_shard`` — engine-only walls of heap vs the region-sharded
+  engine (serial region schedule and the ``workers`` process backend) on
+  the 64x64 storm, with ``EngineProfile`` counters (heap churn, epochs,
+  boundary reconciliations — the data region-size tuning reads).
+* ``storm128`` / ``sweep128_curve`` — the first feasible 128x128 rows
+  (collective storm + uniform saturation curve).  Gated behind
+  ``--full128`` (or ``BENCH_ENGINE_FULL=1``) so CI stays fast; run
+  nightly-style to refresh.
+* ``sweep_compile_once`` — the same 32x32 curve with and without the
+  compile-once workload cache (routes/trees/specs lowered once, only
+  injection starts swapped per point).
 
 Run standalone as a CI gate::
 
     PYTHONPATH=src python -m benchmarks.bench_engine --smoke
 
 exits non-zero if the heap engine is slower than the event engine on the
-16x16 storm scenario or any engine disagrees on a makespan.
+16x16 storm, the shard engine's fingerprint diverges from heap's, the
+shard engine is materially slower than heap on that storm, or any engine
+disagrees on a makespan.
 
 The legacy per-cycle loop is only timed where it finishes in reasonable
-wall-clock (8x8/16x16 storms, 8x8 sweep); larger scenarios record
-``null`` for it rather than burning minutes re-measuring a known order
-of magnitude.
+wall-clock; larger scenarios record ``null`` for it rather than burning
+minutes re-measuring a known order of magnitude.
 """
 
 from __future__ import annotations
@@ -28,12 +41,18 @@ import time
 from pathlib import Path
 
 from repro.core.noc.params import PAPER_MICRO
+from repro.core.noc.program import from_trace
+from repro.core.noc.program.lower import add_op
+from repro.core.noc.program.ops import BarrierOp
+from repro.core.noc.netsim import NoCSim
 from repro.core.noc.traffic import collective_storm, replay, saturation_sweep
 from repro.core.topology import Mesh2D
 
 JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
 SWEEP_RATES = (0.01, 0.05, 0.2)
+# Serial region schedule: no fork/IPC overhead, still the shard engine.
+SHARD_SERIAL = "shard:1x2:1"
 
 
 def _time_storm(mesh_side: int, engine: str, phases: int = 2,
@@ -58,11 +77,15 @@ def _time_sweep(mesh_side: int, engine: str, workers: int = 0) -> tuple[float, i
 # scenario -> {engine: runner or None (too slow to time)}
 SCENARIOS = {
     "storm8": {e: (lambda e=e: _time_storm(8, e)) for e in ("cycle", "event", "heap")},
-    "storm16": {e: (lambda e=e: _time_storm(16, e)) for e in ("cycle", "event", "heap")},
+    "storm16": {
+        e: (lambda e=e: _time_storm(16, e))
+        for e in ("cycle", "event", "heap", SHARD_SERIAL)
+    },
     "storm32": {
         "cycle": None,
         "event": lambda: _time_storm(32, "event", phases=1),
         "heap": lambda: _time_storm(32, "heap", phases=1),
+        SHARD_SERIAL: lambda: _time_storm(32, SHARD_SERIAL, phases=1),
     },
     "sweep8": {e: (lambda e=e: _time_sweep(8, e)) for e in ("cycle", "event", "heap")},
     "sweep16": {
@@ -105,6 +128,108 @@ def _run_scenarios(names=None) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Engine-only storm timing (lowering excluded) with profile counters.
+# ---------------------------------------------------------------------------
+
+
+def _storm_engine_run(mesh_side: int, engine: str, phases: int = 2,
+                      tile_bytes: int = 2048, reps: int = 2):
+    """Lower the storm once per rep, then time only ``sim.run`` (summed
+    over the barrier phases; best of ``reps`` — engine walls on loaded
+    machines jitter far more than the engines differ) and collect the
+    engine's profile counters."""
+    mesh = Mesh2D(mesh_side, mesh_side)
+    prog = from_trace(collective_storm(mesh, tile_bytes=tile_bytes,
+                                       phases=phases))
+    p = PAPER_MICRO
+    by_phase: dict[int, list] = {}
+    for op in prog.ops:
+        by_phase.setdefault(op.phase, []).append(op)
+    best = float("inf")
+    for _ in range(reps):
+        sim = NoCSim(mesh, p)
+        offset = 0.0
+        wall = 0.0
+        counters: dict[str, int] = {}
+        for phase in range(prog.num_phases):
+            barrier_cost = 0.0
+            for op in by_phase.get(phase, ()):
+                if isinstance(op, BarrierOp):
+                    barrier_cost = max(barrier_cost, op.cost(p))
+                    continue
+                add_op(sim, op, offset + op.start, p)
+            t0 = time.perf_counter()
+            prof = sim.run(engine=engine, profile=True)
+            wall += time.perf_counter() - t0
+            for k, v in prof.counters().items():
+                if k in ("regions", "workers"):  # configuration, not volume
+                    counters[k] = v
+                else:
+                    counters[k] = counters.get(k, 0) + v
+            offset = max(offset, prof.makespan) + barrier_cost
+        best = min(best, wall)
+    return best, prof.makespan, counters
+
+
+def _storm64_shard(workers: int) -> dict:
+    """The acceptance row: shard vs heap engine wall on the 64x64 storm."""
+    engines = {
+        "heap": "heap",
+        "shard_serial": SHARD_SERIAL,
+        "shard_workers": f"shard::{workers}",
+    }
+    out: dict = {"workers": workers, "cpu_count": os.cpu_count(),
+                 "wall_s": {}, "profile": {}}
+    makespans = set()
+    for label, engine in engines.items():
+        wall, makespan, counters = _storm_engine_run(64, engine)
+        out["wall_s"][label] = round(wall, 3)
+        out["profile"][label] = counters
+        makespans.add(makespan)
+    if len(makespans) != 1:
+        raise AssertionError(f"storm64: engines disagree: {sorted(makespans)}")
+    out["makespan"] = makespans.pop()
+    heap = out["wall_s"]["heap"]
+    out["speedup_serial"] = round(heap / out["wall_s"]["shard_serial"], 2)
+    out["speedup_workers"] = round(heap / out["wall_s"]["shard_workers"], 2)
+    return out
+
+
+def _storm128() -> dict:
+    """128x128 collective-storm feasibility: heap vs shard engine wall."""
+    out: dict = {"wall_s": {}, "cpu_count": os.cpu_count()}
+    makespans = set()
+    for label, engine in (("heap", "heap"), ("shard", SHARD_SERIAL)):
+        wall, makespan, _ = _storm_engine_run(128, engine, phases=1)
+        out["wall_s"][label] = round(wall, 2)
+        makespans.add(makespan)
+    if len(makespans) != 1:
+        raise AssertionError(f"storm128: engines disagree: {sorted(makespans)}")
+    out["makespan"] = makespans.pop()
+    out["speedup_vs_heap"] = round(out["wall_s"]["heap"] / out["wall_s"]["shard"], 2)
+    out["feasible"] = out["wall_s"]["shard"] < 120.0
+    return out
+
+
+def _sweep128(workers: int) -> dict:
+    """128x128 uniform saturation curve (compile-once + process fan-out)."""
+    rates = (0.005, 0.02, 0.05)
+    t0 = time.perf_counter()
+    pts = saturation_sweep(
+        Mesh2D(128, 128), "uniform", rates, nbytes=256, packets_per_node=1,
+        seed=0, params=PAPER_MICRO, engine="heap", workers=workers,
+    )
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": round(wall, 2),
+        "workers": workers,
+        "points": len(pts),
+        "makespans": [p.makespan for p in pts],
+        "feasible": wall < 600.0,
+    }
+
+
 def _sweep64(workers: int) -> dict:
     rates = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2)
     t0 = time.perf_counter()
@@ -121,17 +246,99 @@ def _sweep64(workers: int) -> dict:
     }
 
 
-def rows():
-    results = _run_scenarios()
+def _clear_lowering_caches() -> None:
+    """Reset the route/tree LRU memos so both sweep variants lower from a
+    cold cache — what a fresh worker process actually experiences (warm
+    in-process memos would otherwise hide most of the re-lowering
+    cost this row exists to measure)."""
+    from repro.core.topology import (
+        _multicast_fork_tree_cached,
+        _reduction_join_tree_cached,
+        _xy_route_cached,
+    )
+    from repro.core.noc.routing import trees as _trees
+
+    _xy_route_cached.cache_clear()
+    _multicast_fork_tree_cached.cache_clear()
+    _reduction_join_tree_cached.cache_clear()
+    for fn in ("_fork_tree_cached", "_join_tree_cached"):
+        cached = getattr(_trees, fn, None)
+        if cached is not None and hasattr(cached, "cache_clear"):
+            cached.cache_clear()
+
+
+def _sweep_compile_once() -> dict:
+    """Compile-once amortization: the same repeated-rate 32x32 curve with
+    per-point re-lowering vs the cached CompiledWorkload."""
+    mesh = Mesh2D(32, 32)
+    rates = SWEEP_RATES + SWEEP_RATES  # repeated-rate sweep
+    kw = dict(nbytes=256, packets_per_node=1, seed=0, params=PAPER_MICRO)
+    _clear_lowering_caches()
+    t0 = time.perf_counter()
+    a = saturation_sweep(mesh, "uniform", rates, compile_once=False, **kw)
+    t1 = time.perf_counter()
+    _clear_lowering_caches()
+    b = saturation_sweep(mesh, "uniform", rates, compile_once=True, **kw)
+    t2 = time.perf_counter()
+    if [p.makespan for p in a] != [p.makespan for p in b]:
+        raise AssertionError("compile-once sweep diverged from relower path")
+    return {
+        "points": len(rates),
+        "relower_wall_s": round(t1 - t0, 3),
+        "compiled_wall_s": round(t2 - t1, 3),
+        "amortization": round((t1 - t0) / max(t2 - t1, 1e-9), 2),
+    }
+
+
+def _load_existing() -> dict:
+    """Keep rows the current invocation does not refresh (the 128x128
+    rows are nightly-style: absent from a default run, preserved from the
+    last ``--full128`` run)."""
+    if JSON_PATH.exists():
+        try:
+            return json.loads(JSON_PATH.read_text())
+        except (OSError, json.JSONDecodeError):
+            pass
+    return {}
+
+
+def rows(full128: bool | None = None):
+    if full128 is None:
+        full128 = os.environ.get("BENCH_ENGINE_FULL", "") not in ("", "0")
+    results = _load_existing()
+    results.update(_run_scenarios())
     workers = min(8, os.cpu_count() or 1)
     results["sweep64_heap_curve"] = _sweep64(workers)
+    results["storm64_shard"] = _storm64_shard(max(4, workers))
+    results["sweep_compile_once"] = _sweep_compile_once()
+    if full128:
+        results["storm128"] = _storm128()
+        results["sweep128_curve"] = _sweep128(workers)
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     out = []
     for name, rec in results.items():
-        if name == "sweep64_heap_curve":
+        if name in ("sweep64_heap_curve", "sweep128_curve"):
             out.append((name, rec["wall_s"] * 1e6,
                         f"points={rec['points']};workers={rec['workers']};"
-                        f"feasible={rec['wall_s'] < 60.0}"))
+                        f"feasible={rec.get('feasible', rec['wall_s'] < 60.0)}"))
+            continue
+        if name == "storm64_shard":
+            out.append((name, rec["wall_s"]["shard_serial"] * 1e6,
+                        f"heap={rec['wall_s']['heap']}s;"
+                        f"x_serial={rec['speedup_serial']};"
+                        f"x_workers{rec['workers']}={rec['speedup_workers']};"
+                        f"epochs={rec['profile']['shard_serial']['epochs']}"))
+            continue
+        if name == "storm128":
+            out.append((name, rec["wall_s"]["shard"] * 1e6,
+                        f"heap={rec['wall_s']['heap']}s;"
+                        f"x_heap={rec['speedup_vs_heap']};"
+                        f"feasible={rec['feasible']}"))
+            continue
+        if name == "sweep_compile_once":
+            out.append((name, rec["compiled_wall_s"] * 1e6,
+                        f"relower={rec['relower_wall_s']}s;"
+                        f"amortization=x{rec['amortization']}"))
             continue
         walls = rec["wall_s"]
         detail = ";".join(
@@ -146,15 +353,31 @@ def rows():
 
 
 def smoke() -> int:
-    """CI gate: heap must not be slower than event on the 16x16 storm."""
+    """CI gate: heap must not lag event, and the shard engine must be
+    fingerprint-identical to heap (and not materially slower) on the
+    16x16 storm."""
     results = _run_scenarios(names={"storm16"})
     rec = results["storm16"]
     print(json.dumps(rec, indent=2))
     if rec["wall_s"]["heap"] > rec["wall_s"]["event"]:
         print("FAIL: heap engine slower than event engine on storm16")
         return 1
+    # Shard gate: bit-identical stream completions + competitive wall.
+    trace = collective_storm(Mesh2D(16, 16), tile_bytes=2048, phases=2)
+    ref = replay(trace, params=PAPER_MICRO, engine="heap")
+    got = replay(trace, params=PAPER_MICRO, engine=SHARD_SERIAL)
+    if ([s.done_cycle for s in ref.streams] != [s.done_cycle for s in got.streams]
+            or ref.makespan != got.makespan):
+        print("FAIL: shard engine fingerprint diverges from heap on storm16")
+        return 1
+    shard_wall = rec["wall_s"][SHARD_SERIAL]
+    if shard_wall > rec["wall_s"]["heap"] * 1.25:
+        print(f"FAIL: shard engine materially slower than heap on storm16 "
+              f"({shard_wall}s vs {rec['wall_s']['heap']}s)")
+        return 1
     print(f"OK: heap {rec['speedup_vs_event']}x faster than event, "
-          f"{rec['speedup_vs_cycle']}x faster than cycle")
+          f"{rec['speedup_vs_cycle']}x faster than cycle; shard "
+          f"fingerprint-identical at {shard_wall}s")
     return 0
 
 
@@ -163,5 +386,5 @@ if __name__ == "__main__":
 
     if "--smoke" in sys.argv:
         sys.exit(smoke())
-    for name, us, derived in rows():
+    for name, us, derived in rows(full128="--full128" in sys.argv or None):
         print(f"{name},{us},{derived}")

@@ -25,17 +25,38 @@
                                       bit-identical to the legacy XY
                                       builders for ``xy``, memoized on
                                       (policy, mesh, addresses)
-``engine``    — three bit-identical run loops: ``heap`` (default; global
+``engine``    — bit-identical run loops: ``heap`` (default; global
                 min-heap keyed on exact next-ready cycle, lazy
                 invalidation, Fenwick-tracked round-robin positions,
-                incremental per-unit readiness — the 64x64-mesh fast
-                path), ``event`` (idle-gap fast-forward, O(streams) per
-                active cycle) and ``cycle`` (the per-cycle reference
-                loop).  Identical per-stream arrivals, completion cycles
-                and arbitration counter across all three; all arbitrate
-                one beat per (link, VC) per cycle (``NoCParams.num_vcs``,
-                ``vc_map`` / ``vc_select``), which degenerates to the
-                historical whole-link arbitration at ``num_vcs=1``.
+                incremental per-unit readiness), ``event`` (idle-gap
+                fast-forward, O(streams) per active cycle) and ``cycle``
+                (the per-cycle reference loop).  Identical per-stream
+                arrivals, completion cycles and arbitration counter
+                across all engines; all arbitrate one beat per
+                (link, VC) per cycle (``NoCParams.num_vcs``, ``vc_map``
+                / ``vc_select``), which degenerates to the historical
+                whole-link arbitration at ``num_vcs=1``.
+                ``NoCSim.run(profile=True)`` returns an
+                :class:`~repro.core.noc.engine.EngineProfile` of
+                scheduler counters (heap pushes/pops, lazy
+                invalidations, shard epochs/boundary reconciliations).
+``shard``     — ``engine='shard'`` (or ``'shard:GXxGY:W'``): the
+                region-sharded replay engine for 128x128-class meshes.
+                Invariants that make it exact: every unit's links share
+                a source tile, so links partition by rectangular region
+                (no cross-region arbitration); the round-robin order
+                restricted to a region is the global order (same
+                rotated live-position key); and conservatively bounded
+                epochs (T = 1 + min over permanently valid lower bounds
+                on boundary-unit fires and stream completions, lazily
+                refreshed) freeze the live set and all cross-region
+                arrivals, so per-(link, VC) arbitration runs
+                independently per region — serially or on fork-worker
+                processes — and reconciles boundary links at epoch
+                edges.  Bit-identical to ``heap`` (arrivals, done
+                cycles, ``_rr``) for every grid and worker count;
+                falls back to in-process execution (with a warning)
+                when workers cannot spawn.
 ``program``   — collective program IR, the single workload API from
                 emitters to engines:
                 ``program.ops``      typed op nodes (unicast / multicast /
@@ -58,12 +79,22 @@
                                      overlap (``mode='window'``, endpoint
                                      tiles or policy-aware link footprints);
                                      per-op completion/latency results with
-                                     percentile stats
+                                     percentile stats.  ``CompiledWorkload``
+                                     / ``compile_workload``: lower a
+                                     (mesh, params, program) once — routes,
+                                     fork/join trees, stream specs, unit
+                                     topologies, packet ids — and re-run it
+                                     with only injection starts swapped
+                                     (cache key: one spec per op of the
+                                     compiled program instance)
 ``traffic``   — traffic engine subsystem:
                 ``traffic.patterns``  seedable synthetic workloads (uniform,
                                       transpose, bit-complement, bit-reversal,
                                       hotspot, neighbor, all-to-all) and
-                                      SUMMA/FCL collective storms
+                                      SUMMA/FCL collective storms; the
+                                      rate-independent draws live in a
+                                      ``SyntheticPopulation`` so sweeps
+                                      re-time one population per rate
                 ``traffic.trace``     TrafficEvent/Trace serialization, live
                                       TraceRecorder capture, and contended
                                       replay — a thin shim over the program
@@ -75,14 +106,22 @@
                 ``traffic.sweep``     injection-rate vs. latency/throughput
                                       saturation curves with p50/p95/p99
                                       latency tails; ``workers=N`` fans
-                                      points over a process pool;
+                                      point chunks over a process pool
+                                      (warning on fallback) and
+                                      ``compile_once`` lowers each
+                                      population one time per worker via
+                                      ``CompiledWorkload``;
                                       ``compare_policies`` reports the
                                       saturation-point shift per
                                       (routing policy, VC count)
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper, plus
                 ``load_claims``: saturation-aware checks of a sweep
-                curve at a chosen offered load (not just idle-network)
+                curve at a chosen offered load (not just idle-network),
+                and ``fit_claims``: least-squares *recovery* of
+                alpha0/beta from the linear region of measured sweep
+                curves across payload sizes (round-trip tested against
+                synthetic curves)
 """
 
 from repro.core.noc.params import NoCParams, PAPER_MICRO, PAPER_GEMM  # noqa: F401

@@ -19,6 +19,7 @@ Two calibration regimes:
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.noc import energy as noc_energy
 from repro.core.noc import model as m
@@ -171,6 +172,124 @@ def load_claims(points, at_rate: float, knee: float = 3.0) -> list[Claim]:
         Claim(f"throughput tracks offered load at {pt.rate:g}",
               1.0, tracking, 0.15),
     ]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationFit:
+    """Least-squares (alpha0, beta) recovered from measured sweep curves.
+
+    ``intercepts`` are the fitted zero-load latencies per payload size
+    (as ``(beats, cycles)``); ``residual`` is the RMS error of the
+    beats-line fit through them.
+    """
+
+    alpha0: float
+    beta: float
+    intercepts: tuple[tuple[int, float], ...]
+    residual: float
+
+    def claims(self, params: NoCParams, rel_tol: float = 0.15) -> list[Claim]:
+        """Compare the fitted values against a parameter set's claims."""
+        return [
+            Claim("fitted alpha0 matches calibration", params.alpha0,
+                  self.alpha0, rel_tol),
+            Claim("fitted beta matches calibration", params.beta,
+                  self.beta, rel_tol),
+        ]
+
+
+def _linear_intercept(points, knee: float) -> float:
+    """Zero-load latency of one curve: least-squares intercept of
+    ``mean_latency = c + s * rate`` over the pre-knee (linear) points."""
+    if not points:
+        raise ValueError("fit needs a non-empty sweep curve")
+    base = points[0].mean_latency
+    lin = [pt for pt in points if pt.mean_latency <= knee * base]
+    if len(lin) < 2:
+        return lin[0].mean_latency if lin else base
+    n = len(lin)
+    sx = sum(pt.rate for pt in lin)
+    sy = sum(pt.mean_latency for pt in lin)
+    sxx = sum(pt.rate * pt.rate for pt in lin)
+    sxy = sum(pt.rate * pt.mean_latency for pt in lin)
+    den = n * sxx - sx * sx
+    if den == 0:
+        return sy / n
+    slope = (n * sxy - sx * sy) / den
+    return (sy - slope * sx) / n
+
+
+def fit_claims(
+    curves,
+    mean_hops: float,
+    params: NoCParams | None = None,
+    knee: float = 3.0,
+) -> CalibrationFit:
+    """Fit alpha0/beta to measured saturation curves (least squares).
+
+    ``curves`` maps payload ``nbytes`` to a
+    :func:`~repro.core.noc.traffic.sweep.saturation_sweep` curve of the
+    *same* pattern/seed/mesh; ``mean_hops`` is the mean hop count of the
+    swept packet population.  The fit inverts the zero-load unicast
+    model: each curve's linear-region intercept is
+    ``alpha0 + 3 * hop_cycles * mean_hops + 1 + (beats - 1) * beta``
+    (DMA round-trip ``alpha0 + 2h``, then ``h`` route hops, eject, and
+    ``beats - 1`` serialization beats), so regressing the intercepts on
+    ``beats - 1`` yields beta as the slope and alpha0 from the constant
+    term.  This turns :func:`load_claims`'s *validation* of given
+    alphas/betas into *recovery* of them from measurements — the ROADMAP
+    calibration-fitting item (minimal version: unicast sweeps, uniform
+    hop estimate from the caller).
+
+    ``params`` supplies the fixed structural constants (beat size,
+    ``hop_cycles``); its alpha0/beta are *not* used by the fit — compare
+    them afterwards via :meth:`CalibrationFit.claims`.
+    """
+    p = params or NoCParams()
+    pts: list[tuple[int, float]] = []
+    for nbytes in sorted(curves):
+        beats = p.beats(nbytes)
+        pts.append((beats - 1, _linear_intercept(curves[nbytes], knee)))
+    if len(pts) < 2:
+        raise ValueError(
+            "fit_claims needs curves at >= 2 payload sizes to separate "
+            "alpha0 from beta"
+        )
+    n = len(pts)
+    sx = float(sum(x for x, _ in pts))
+    sy = sum(y for _, y in pts)
+    sxx = float(sum(x * x for x, _ in pts))
+    sxy = sum(x * y for x, y in pts)
+    den = n * sxx - sx * sx
+    if den == 0:
+        raise ValueError("fit_claims needs distinct beat counts")
+    beta = (n * sxy - sx * sy) / den
+    a = (sy - beta * sx) / n
+    alpha0 = a - 3.0 * p.hop_cycles * mean_hops - 1.0
+    residual = math.sqrt(
+        sum((a + beta * x - y) ** 2 for x, y in pts) / n
+    )
+    return CalibrationFit(
+        alpha0=alpha0, beta=beta, intercepts=tuple(pts), residual=residual,
+    )
+
+
+def population_mean_hops(mesh, cfg) -> float:
+    """Mean Manhattan hop count of a synthetic packet population — the
+    hop estimate :func:`fit_claims` needs for its alpha0 recovery."""
+    from repro.core.noc.traffic.patterns import synthetic_population
+
+    pop = synthetic_population(mesh, cfg)
+    hops = [
+        mesh.hops(src, dst)
+        for node in pop.draws
+        for _, pair in node
+        if pair is not None
+        for src, dst in [pair]
+    ]
+    if not hops:
+        raise ValueError("population emitted no packets")
+    return sum(hops) / len(hops)
 
 
 def report_load(points, at_rate: float, knee: float = 3.0) -> str:

@@ -46,6 +46,15 @@ reproduces the historical whole-link arbitration exactly:
       ``advance_unit`` frontier cursors; an advance dirties only the unit
       itself and its downstream consumer units, never the full edge walk.
 
+``noc.shard`` adds a fourth bit-identical engine on top of these
+invariants: ``engine='shard'`` partitions the mesh into rectangular
+regions (links partition cleanly because every unit's edges share a
+source tile) and runs each region's per-(link, VC) arbitration
+independently inside conservatively bounded epochs, reconciling
+boundary arrivals, completions and gate releases at epoch edges —
+serially or on fork-worker processes.  See the ``shard`` module
+docstring for the exactness argument.
+
 Cross-stream *gates* (``_StreamState.gates``) are the engines' only
 inter-stream dependency mechanism: a gated stream's inject clock starts
 the cycle after its last gate stream drains.  They were introduced for
@@ -63,12 +72,43 @@ and the blocking edges) instead of spinning to ``max_cycles``.
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import math
-from typing import TYPE_CHECKING, Sequence
+from typing import TYPE_CHECKING, Optional, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.noc.netsim import NoCSim, _StreamState
+
+
+@dataclasses.dataclass
+class EngineProfile:
+    """Lightweight engine counters from ``NoCSim.run(profile=True)``.
+
+    The data needed to tune the heap/shard hot paths — how much scheduler
+    churn a scenario causes (heap pushes/pops, lazily dropped stale
+    entries) and, for the shard engine, how the epoch protocol behaved
+    (epoch count, boundary arrivals reconciled across regions) — which is
+    what region-size tuning reads.  Counters that do not apply to the
+    engine that ran stay 0.
+    """
+
+    engine: str = "heap"
+    makespan: int = 0
+    advances: int = 0              # beats advanced (units fired)
+    heap_pushes: int = 0           # global scheduler heap pushes
+    heap_pops: int = 0             # global scheduler heap pops
+    lazy_invalidations: int = 0    # stale entries dropped on pop
+    epochs: int = 0                # shard: bounded epochs executed
+    boundary_reconciliations: int = 0  # shard: boundary arrivals shipped
+    regions: int = 0               # shard: region count
+    workers: int = 0               # shard: worker processes used (0=serial)
+
+    def counters(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("engine")
+        d.pop("makespan")
+        return d
 
 
 def gate_dependents(streams: Sequence["_StreamState"]) -> dict[int, list["_StreamState"]]:
@@ -187,7 +227,8 @@ class _Fenwick:
         return s
 
 
-def run_heap(sim: "NoCSim", max_cycles: int) -> int:
+def run_heap(sim: "NoCSim", max_cycles: int,
+             prof: Optional[EngineProfile] = None) -> int:
     """Heap-scheduled engine: bit-identical to the per-cycle loop, but a
     cycle only ever touches the streams whose exact next-ready threshold
     has been reached (plus carried arbitration losers)."""
@@ -242,6 +283,8 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
     rr_base = sim._rr
     t = -1          # last processed cycle
     carry: list[int] = []  # streams still ready after losing arbitration at t
+    n_adv = n_pop = n_stale = 0
+    n_push = len(gheap)  # initial population counts as pushes
     while n_live:
         if carry:
             t_next = t + 1
@@ -251,6 +294,7 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
                 c, i = gheap[0]
                 if not live[i] or sched[i] != c:
                     heapq.heappop(gheap)  # stale (lazy invalidation)
+                    n_stale += 1
                     continue
                 t_next = c
                 break
@@ -270,8 +314,11 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
         carry = []
         while gheap and gheap[0][0] <= t:
             c, i = heapq.heappop(gheap)
+            n_pop += 1
             if live[i] and sched[i] == c:
                 ready.add(i)
+            else:
+                n_stale += 1
         # Rotated live-position order == the legacy pending-list rotation.
         start = (rr_base + t) % n_live
         ordered = sorted(
@@ -288,6 +335,7 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
                     continue
                 busy.update(links)
                 s.advance_unit(ui, t)
+                n_adv += 1
             if s.done_cycle is not None:
                 finished.append(i)
                 continue
@@ -300,6 +348,7 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
             else:
                 sched[i] = c
                 heapq.heappush(gheap, (c, i))
+                n_push += 1
         for i in finished:
             live[i] = False
             sched[i] = None
@@ -316,7 +365,13 @@ def run_heap(sim: "NoCSim", max_cycles: int) -> int:
                 if c is not None and (sched[d] is None or c < sched[d]):
                     sched[d] = c
                     heapq.heappush(gheap, (c, d))
+                    n_push += 1
     # One arbitration slot per cycle examined, exactly like the legacy
     # loop (idle gaps included): cycles 0..t inclusive.
     sim._rr = rr_base + t + 1
+    if prof is not None:
+        prof.advances += n_adv
+        prof.heap_pushes += n_push
+        prof.heap_pops += n_pop
+        prof.lazy_invalidations += n_stale
     return max(s.done_cycle for s in streams)

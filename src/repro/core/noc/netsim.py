@@ -115,17 +115,25 @@ class _StreamState:
             self.inject = {
                 e: (_frac(s), _frac(r)) for e, (s, r) in self.inject.items()
             }
-        # Lazy structures (built on first use, shared across runs).
+        # Lazy structures (built on first use, shared across runs).  The
+        # *topology* (units, consumer graph, link sets, final counts) is a
+        # pure function of prereqs/groups/finals and can be adopted from an
+        # identically-structured stream (compile-once sweeps share it across
+        # injection-rate points via StreamSpec); the *records* (_uinfo)
+        # reference this instance's arrival lists and inject clock, so they
+        # are always built per stream.
         self._units: Optional[list[tuple[Edge, ...]]] = None
         self._unit_consumers: Optional[list[tuple[int, ...]]] = None
-        self._uinfo: list[tuple] = []
-        self._unit_links: list[tuple[Edge, ...]] = []
+        self._unit_links: Optional[list[tuple[Edge, ...]]] = None
+        self._unit_final_count: Optional[list[int]] = None
+        self._uinfo: Optional[list[tuple]] = None
         self._finals_set: frozenset[Edge] = frozenset(self.finals)
         # Heap-engine state (rebuilt per run by _heap_init).
         self._unit_ready: list[Optional[int]] = []
         self._uheap: list[tuple[int, int]] = []
         self._ready_list: list[int] = []
         self._ready_set: set[int] = set()
+        self._final_need: int = 0
         self._gate_t0: Optional[int] = None
 
     def edges(self) -> list[Edge]:
@@ -178,9 +186,10 @@ class _StreamState:
     # belongs to at most one unit (builders guarantee this); an edge that
     # appears only as someone's prereq and in no unit can never advance.
 
-    def _ensure_units(self) -> None:
-        if self._units is not None:
-            return
+    def _build_topology(self) -> None:
+        """Unit list, consumer graph, link sets and final counts — a pure
+        function of prereqs/groups/finals, shareable across streams with
+        identical structure (see :meth:`_adopt_topology`)."""
         units: list[tuple[Edge, ...]] = [tuple(g) for g in self.groups]
         seen = {e for g in self.groups for e in g}
         units.extend((e,) for e in self.prereqs if e not in seen)
@@ -197,6 +206,32 @@ class _StreamState:
                         consumers[j].add(i)
         self._units = units
         self._unit_consumers = [tuple(sorted(c)) for c in consumers]
+        self._unit_links = [
+            tuple(e for e in u if e[0] != e[1]) for u in units
+        ]
+        self._unit_final_count = [
+            sum(1 for e in u if e in self._finals_set) for u in units
+        ]
+
+    def _topology(self) -> tuple:
+        """The shareable unit topology (built on demand)."""
+        if self._units is None:
+            self._build_topology()
+        return (self._units, self._unit_consumers, self._unit_links,
+                self._unit_final_count)
+
+    def _adopt_topology(self, topo: tuple) -> None:
+        """Install a topology computed from an identically-structured stream
+        (compile-once path); skips the consumer-graph rebuild entirely."""
+        (self._units, self._unit_consumers, self._unit_links,
+         self._unit_final_count) = topo
+
+    def _ensure_units(self) -> None:
+        if self._uinfo is not None:
+            return
+        if self._units is None:
+            self._build_topology()
+        units = self._units
         # Compiled per-unit readiness records for the incremental hot path:
         # direct references to the arrival lists (no Edge hashing) and
         # integer-only inject/rate ceilings.  ceil(s + b*r) over Fractions
@@ -227,12 +262,6 @@ class _StreamState:
                 recs.append((arr, ups, inj, math.ceil(self.rate.get(e, 1))))
             uinfo.append(tuple(recs))
         self._uinfo = uinfo
-        self._unit_links = [
-            tuple(e for e in u if e[0] != e[1]) for u in units
-        ]
-        self._unit_has_final = [
-            not self._finals_set.isdisjoint(u) for u in units
-        ]
         self._final_arrs = [
             self.arrivals.setdefault(e, []) for e in self.finals
         ]
@@ -362,6 +391,11 @@ class _StreamState:
         self._uheap = heap
         self._ready_list = []
         self._ready_set = set()
+        # Remaining final-edge arrivals before this stream completes: the
+        # done check in advance_unit is a counter decrement instead of a
+        # length scan over every final arrival list per advanced beat.
+        nb = self.n_beats
+        self._final_need = sum(nb - len(a) for a in self._final_arrs)
 
     def ready_units(self, t: int) -> list[int]:
         """Unit indices ready at cycle ``t``, in unit (arbitration) order.
@@ -389,9 +423,10 @@ class _StreamState:
         self.ready_hint = None
         for rec in self._uinfo[i]:
             rec[0].append(t)
-        if self.done_cycle is None and self._unit_has_final[i]:
-            nb = self.n_beats
-            if all(len(a) >= nb for a in self._final_arrs):
+        nf = self._unit_final_count[i]
+        if nf and self.done_cycle is None:
+            self._final_need -= nf
+            if self._final_need == 0:
                 self.done_cycle = t
         if i in self._ready_set:
             self._ready_set.remove(i)
@@ -497,6 +532,170 @@ def _chain(edges: list[Edge]) -> tuple[dict[Edge, list[Edge]], list[list[Edge]]]
     return prereqs, [[e] for e in edges]
 
 
+# ---------------------------------------------------------------------------
+# Start-independent stream structure (compile-once path).
+#
+# Everything ``add_unicast`` / ``add_multicast`` / ``add_reduction`` /
+# ``add_timed`` derive from a workload op — routes, fork/join trees, the
+# prereq/group graph, rates, finals, the VC — is independent of the
+# injection clock.  A :class:`StreamSpec` captures exactly that, so a sweep
+# can lower a workload once and instantiate fresh streams per injection
+# rate by swapping only the inject ``start``.  ``add_*`` build through the
+# same ``_*_structure`` helpers, so the compiled and direct paths cannot
+# drift.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamSpec:
+    """Compiled, start-independent form of one stream.
+
+    ``instantiate`` builds a fresh :class:`_StreamState` whose inject clock
+    is ``start + inject_offset`` at ``inject_rate`` cycles/beat on every
+    edge of ``inject_edges``.  The unit topology (units, consumer graph,
+    link sets, final counts) is computed on first instantiation and shared
+    by every subsequent one — the cache key the compile-once sweeps rely
+    on is simply the identity of the spec (one per (mesh, params, op)).
+    Structure dicts are shared, never copied: streams only ever mutate
+    their own ``arrivals``.
+    """
+
+    n_beats: int
+    prereqs: dict
+    groups: list
+    rate: dict
+    inject_edges: tuple
+    inject_offset: float
+    inject_rate: float
+    finals: list
+    vc: int = 0
+    _topology: Optional[tuple] = dataclasses.field(default=None, repr=False)
+
+    def instantiate(self, sim: "NoCSim", start: float) -> "_StreamState":
+        st = _StreamState(
+            n_beats=self.n_beats,
+            prereqs=self.prereqs,
+            groups=self.groups,
+            rate=self.rate,
+            # Native float addition, exactly like the historical add_*
+            # builders (start + alpha rounds once as a double; __post_init__
+            # then converts the result losslessly).
+            inject={
+                e: (start + self.inject_offset, self.inject_rate)
+                for e in self.inject_edges
+            },
+            finals=self.finals,
+            vc=self.vc,
+        )
+        if self._topology is None:
+            self._topology = st._topology()
+        else:
+            st._adopt_topology(self._topology)
+        sim.streams.append(st)
+        return st
+
+
+def _unicast_structure(mesh, policy, src: Coord, dst: Coord, pid: int):
+    """Chain structure of a policy-routed unicast; returns (prereqs, groups,
+    finals, inject_edge)."""
+    path = policy.route(mesh, src, dst, pid)
+    edges: list[Edge] = [(src, src)] + list(zip(path, path[1:])) + [(dst, dst)]
+    prereqs, groups = _chain(edges)
+    return prereqs, groups, [edges[-1]], edges[0]
+
+
+def _multicast_structure(mesh, policy, src: Coord, maddr: MultiAddress):
+    """Fork-tree structure of a multicast; returns (prereqs, groups, finals,
+    inject_edge).  Fork groups advance in lockstep (Section 3.1.2)."""
+    fork = fork_tree(mesh, src, maddr, policy=policy)
+    # fork maps router -> set(next hops); local delivery encoded as self.
+    children: dict[Coord, list[Coord]] = {
+        k: sorted(v, key=tuple) for k, v in fork.items()
+    }
+    prereqs: dict[Edge, list[Edge]] = {}
+    groups: list[list[Edge]] = []
+    inject_edge: Edge = (src, src)
+    prereqs[inject_edge] = []
+    groups.append([inject_edge])
+    parent_edge: dict[Coord, Edge] = {src: inject_edge}
+    order = [src]
+    seen = {src}
+    while order:
+        u = order.pop(0)
+        outs = children.get(u, [])
+        group = []
+        for v in outs:
+            e: Edge = (u, v) if v != u else (u, u)
+            if e == parent_edge.get(u):
+                continue
+            prereqs[e] = [parent_edge[u]]
+            group.append(e)
+            if v != u and v not in seen:
+                parent_edge[v] = e
+                seen.add(v)
+                order.append(v)
+        if group:
+            groups.append(group)
+    dests = maddr.destinations(mesh)
+    finals = [(d, d) for d in dests if (d, d) in prereqs]
+    return prereqs, groups, finals or [inject_edge], inject_edge
+
+
+def _reduction_structure(mesh, policy, sources: tuple[Coord, ...], dst: Coord):
+    """Join-tree structure of a wide reduction; returns (prereqs, groups,
+    rate, finals, inject_edges).  A router with ``f`` selected inputs
+    sustains one fully-reduced beat per ``f - 1`` cycles (Section 3.1.4)."""
+    join = join_tree(mesh, list(sources), dst, policy=policy)
+    # join maps router -> set(inputs); input==router encodes local source.
+    prereqs: dict[Edge, list[Edge]] = {}
+    rate: dict[Edge, float] = {}
+    inject_edges: list[Edge] = []
+    groups: list[list[Edge]] = []
+
+    def in_edges(u: Coord) -> list[Edge]:
+        out = []
+        for w in sorted(join.get(u, ()), key=tuple):
+            out.append((w, w) if w == u else (w, u))
+        return out
+
+    # Build edges from the join structure directly: for every router v
+    # with inputs I(v), each input edge (w,v) w!=v is the out-edge of w;
+    # its prereqs are all of w's inputs and its rate is f-1 for f >= 2
+    # (a single two-input wide reduction unit per router, Section 3.1.4).
+    for v, inputs in join.items():
+        for w in sorted(inputs, key=tuple):
+            if w == v:
+                e: Edge = (v, v)  # local contribution inject
+                prereqs.setdefault(e, [])
+                inject_edges.append(e)
+                groups.append([e])
+            else:
+                e = (w, v)
+                ups = in_edges(w)
+                prereqs[e] = ups
+                f = len(ups)
+                if f >= 2:
+                    rate[e] = float(f - 1)
+                groups.append([e])
+    eject: Edge = (dst, dst)
+    if eject not in prereqs:  # dst without local contribution
+        prereqs[eject] = in_edges(dst)
+        groups.append([eject])
+        f = len(prereqs[eject])
+        if f >= 2:
+            rate[eject] = float(f - 1)
+    else:
+        # dst contributes locally: add a separate sink edge combining all.
+        sink: Edge = (dst, Coord(-1, -1))
+        prereqs[sink] = in_edges(dst)
+        f = len(prereqs[sink])
+        if f >= 2:
+            rate[sink] = float(f - 1)
+        groups.append([sink])
+        eject = sink
+    return prereqs, groups, rate, [eject], tuple(inject_edges)
+
+
 class NoCSim:
     """Cycle-stepped simulator over a shared link fabric."""
 
@@ -509,6 +708,7 @@ class NoCSim:
         self._rr = 0  # round-robin arbitration counter, one slot per cycle
         self._pkt_seq = 0  # per-sim packet id: O1TURN split, packet-mode VCs
         self.recorders: list = []  # traffic.trace.TraceRecorder et al.
+        self.last_profile = None  # EngineProfile of the last run(profile=True)
 
     # -- arbitration counter -------------------------------------------------
 
@@ -530,68 +730,50 @@ class NoCSim:
 
     def add_unicast(self, src: Coord, dst: Coord, nbytes: int, start: float = 0.0):
         self._record("unicast", src=src, dst=dst, nbytes=nbytes, start=start)
-        n = self.p.beats(nbytes)
+        spec = self.unicast_spec(src, dst, nbytes)
+        return spec.instantiate(self, start)
+
+    def unicast_spec(self, src: Coord, dst: Coord, nbytes: int) -> StreamSpec:
+        """Compile a unicast without instantiating it (consumes a packet id
+        — the o1turn route split and packet-mode VC slicing key on it, so
+        compiled and direct lowering of the same op sequence agree)."""
         pid = self._pkt_seq
         self._pkt_seq += 1
-        path = self.policy.route(self.mesh, src, dst, pid)
-        edges: list[Edge] = [(src, src)] + list(zip(path, path[1:])) + [(dst, dst)]
-        prereqs, groups = _chain(edges)
-        alpha = self.p.alpha(self.mesh.hops(src, dst))
-        st = _StreamState(
-            n_beats=n,
+        prereqs, groups, finals, inject_edge = _unicast_structure(
+            self.mesh, self.policy, src, dst, pid
+        )
+        return StreamSpec(
+            n_beats=self.p.beats(nbytes),
             prereqs=prereqs,
             groups=groups,
             rate={},
-            inject={edges[0]: (start + alpha, self.p.beta)},
-            finals=[edges[-1]],
+            inject_edges=(inject_edge,),
+            inject_offset=self.p.alpha(self.mesh.hops(src, dst)),
+            inject_rate=self.p.beta,
+            finals=finals,
             vc=self.p.vc_of("unicast", packet_id=pid),
         )
-        self.streams.append(st)
-        return st
 
     def add_multicast(self, src: Coord, maddr: MultiAddress, nbytes: int, start: float = 0.0):
         self._record("multicast", src=src, maddr=maddr, nbytes=nbytes, start=start)
-        n = self.p.beats(nbytes)
-        fork = fork_tree(self.mesh, src, maddr, policy=self.policy)
-        # fork maps router -> set(next hops); local delivery encoded as self.
-        children: dict[Coord, list[Coord]] = {k: sorted(v, key=tuple) for k, v in fork.items()}
-        prereqs: dict[Edge, list[Edge]] = {}
-        groups: list[list[Edge]] = []
-        inject_edge: Edge = (src, src)
-        prereqs[inject_edge] = []
-        groups.append([inject_edge])
-        parent_edge: dict[Coord, Edge] = {src: inject_edge}
-        order = [src]
-        seen = {src}
-        while order:
-            u = order.pop(0)
-            outs = children.get(u, [])
-            group = []
-            for v in outs:
-                e: Edge = (u, v) if v != u else (u, u)
-                if e == parent_edge.get(u):
-                    continue
-                prereqs[e] = [parent_edge[u]]
-                group.append(e)
-                if v != u and v not in seen:
-                    parent_edge[v] = e
-                    seen.add(v)
-                    order.append(v)
-            if group:
-                groups.append(group)
-        dests = maddr.destinations(self.mesh)
-        finals = [(d, d) for d in dests if (d, d) in prereqs]
-        st = _StreamState(
-            n_beats=n,
+        spec = self.multicast_spec(src, maddr, nbytes)
+        return spec.instantiate(self, start)
+
+    def multicast_spec(self, src: Coord, maddr: MultiAddress, nbytes: int) -> StreamSpec:
+        prereqs, groups, finals, inject_edge = _multicast_structure(
+            self.mesh, self.policy, src, maddr
+        )
+        return StreamSpec(
+            n_beats=self.p.beats(nbytes),
             prereqs=prereqs,
             groups=groups,
             rate={},
-            inject={inject_edge: (start + self.p.alpha(1), self.p.beta)},
-            finals=finals or [inject_edge],
+            inject_edges=(inject_edge,),
+            inject_offset=self.p.alpha(1),
+            inject_rate=self.p.beta,
+            finals=finals,
             vc=self.p.vc_of("multicast"),
         )
-        self.streams.append(st)
-        return st
 
     def add_reduction(
         self,
@@ -605,67 +787,34 @@ class NoCSim:
         self._record(
             "reduction", sources=tuple(sources), dst=dst, nbytes=nbytes, start=start
         )
-        n = self.p.beats(nbytes)
-        alpha = self.p.alpha(1) if inject_alpha is None else inject_alpha
-        join = join_tree(self.mesh, list(sources), dst, policy=self.policy)
-        # join maps router -> set(inputs); input==router encodes local source.
-        prereqs: dict[Edge, list[Edge]] = {}
-        rate: dict[Edge, float] = {}
-        inject: dict[Edge, tuple[float, float]] = {}
-        groups: list[list[Edge]] = []
+        spec = self.reduction_spec(
+            sources, dst, nbytes, inject_alpha=inject_alpha,
+            traffic_class=traffic_class,
+        )
+        return spec.instantiate(self, start)
 
-        def in_edges(u: Coord) -> list[Edge]:
-            out = []
-            for w in sorted(join.get(u, ()), key=tuple):
-                out.append((w, w) if w == u else (w, u))
-            return out
-
-        # Build edges from the join structure directly: for every router v
-        # with inputs I(v), each input edge (w,v) w!=v is the out-edge of w;
-        # its prereqs are all of w's inputs and its rate is f-1 for f >= 2
-        # (a single two-input wide reduction unit per router, Section 3.1.4).
-        for v, inputs in join.items():
-            for w in sorted(inputs, key=tuple):
-                if w == v:
-                    e: Edge = (v, v)  # local contribution inject
-                    prereqs.setdefault(e, [])
-                    inject[e] = (start + alpha, self.p.beta)
-                    groups.append([e])
-                else:
-                    e = (w, v)
-                    ups = in_edges(w)
-                    prereqs[e] = ups
-                    f = len(ups)
-                    if f >= 2:
-                        rate[e] = float(f - 1)
-                    groups.append([e])
-        eject: Edge = (dst, dst)
-        if eject not in prereqs:  # dst without local contribution
-            prereqs[eject] = in_edges(dst)
-            groups.append([eject])
-            f = len(prereqs[eject])
-            if f >= 2:
-                rate[eject] = float(f - 1)
-        else:
-            # dst contributes locally: add a separate sink edge combining all.
-            sink: Edge = (dst, Coord(-1, -1))
-            prereqs[sink] = in_edges(dst)
-            f = len(prereqs[sink])
-            if f >= 2:
-                rate[sink] = float(f - 1)
-            groups.append([sink])
-            eject = sink
-        st = _StreamState(
-            n_beats=n,
+    def reduction_spec(
+        self,
+        sources: Sequence[Coord],
+        dst: Coord,
+        nbytes: int,
+        inject_alpha: float | None = None,
+        traffic_class: str = "reduction",
+    ) -> StreamSpec:
+        prereqs, groups, rate, finals, inject_edges = _reduction_structure(
+            self.mesh, self.policy, tuple(sources), dst
+        )
+        return StreamSpec(
+            n_beats=self.p.beats(nbytes),
             prereqs=prereqs,
             groups=groups,
             rate=rate,
-            inject=inject,
-            finals=[eject],
+            inject_edges=inject_edges,
+            inject_offset=self.p.alpha(1) if inject_alpha is None else inject_alpha,
+            inject_rate=self.p.beta,
+            finals=finals,
             vc=self.p.vc_of(traffic_class),
         )
-        self.streams.append(st)
-        return st
 
     def add_timed(self, at: Coord, cycles: float, start: float = 0.0):
         """A link-free timed interval at tile ``at`` (compute / barrier).
@@ -679,37 +828,66 @@ class NoCSim:
         recorded by trace recorders (programs serialize as schema v3,
         which keeps the op form).
         """
+        return self.timed_spec(at, cycles).instantiate(self, start)
+
+    def timed_spec(self, at: Coord, cycles: float) -> StreamSpec:
         e: Edge = (at, at)
-        st = _StreamState(
+        return StreamSpec(
             n_beats=1,
             prereqs={e: []},
             groups=[[e]],
             rate={},
-            inject={e: (start + cycles, 0)},
+            inject_edges=(e,),
+            inject_offset=cycles,
+            inject_rate=0,
             finals=[e],
         )
-        self.streams.append(st)
-        return st
 
     # -- engine -------------------------------------------------------------
 
-    def run(self, max_cycles: int = 2_000_000, engine: str = "heap") -> int:
-        """Advance until all streams complete; returns the last done cycle.
+    def run(self, max_cycles: int = 2_000_000, engine: str = "heap",
+            profile: bool = False):
+        """Advance until all streams complete; returns the last done cycle
+        (or an :class:`~repro.core.noc.engine.EngineProfile` carrying the
+        makespan plus engine counters when ``profile=True``).
 
         ``engine='heap'`` (default) schedules pending streams in a global
         min-heap keyed on exact next-ready cycle with incremental per-unit
-        readiness — the fast path for large meshes.  ``engine='event'``
-        fast-forwards idle gaps but still scans every pending stream per
-        active cycle; ``engine='cycle'`` is the legacy
-        one-iteration-per-cycle loop.  All three are bit-identical (same
-        per-stream arrivals, completion cycles and arbitration counter).
+        readiness — the fast path for large meshes.  ``engine='shard'``
+        (or ``'shard:GXxGY:W'`` — region grid and worker count) partitions
+        the mesh into rectangular regions and runs each region's
+        per-(link, VC) arbitration independently inside conservatively
+        bounded epochs, reconciling boundary links at epoch edges; see
+        ``noc.shard``.  ``engine='event'`` fast-forwards idle gaps but
+        still scans every pending stream per active cycle;
+        ``engine='cycle'`` is the legacy one-iteration-per-cycle loop.
+        All engines are bit-identical (same per-stream arrivals,
+        completion cycles and arbitration counter).
         """
+        from repro.core.noc.engine import EngineProfile
+
+        prof = EngineProfile(engine=engine) if profile else None
         if engine == "heap":
-            return run_heap(self, max_cycles)
-        if engine == "event":
-            return run_event_driven(self, max_cycles)
-        if engine != "cycle":
+            makespan = run_heap(self, max_cycles, prof)
+        elif engine == "event":
+            makespan = run_event_driven(self, max_cycles)
+        elif isinstance(engine, str) and engine.startswith("shard"):
+            from repro.core.noc.shard import parse_shard_engine, run_shard
+
+            cfg = parse_shard_engine(engine)
+            makespan = run_shard(self, max_cycles, cfg, prof)
+        elif engine == "cycle":
+            makespan = self._run_cycle(max_cycles)
+        else:
             raise ValueError(f"unknown engine {engine!r}")
+        if prof is not None:
+            prof.makespan = makespan
+            self.last_profile = prof
+            return prof
+        return makespan
+
+    def _run_cycle(self, max_cycles: int) -> int:
+        """The legacy one-iteration-per-cycle reference loop."""
         from repro.core.noc.engine import gate_dependents, stuck_error
 
         dependents = gate_dependents(self.streams)

@@ -20,8 +20,10 @@ engines.
 
 from repro.core.noc.program.builder import ProgramBuilder  # noqa: F401
 from repro.core.noc.program.lower import (  # noqa: F401
+    CompiledWorkload,
     OpRun,
     ProgramResult,
+    compile_workload,
     run_program,
 )
 from repro.core.noc.program.ops import (  # noqa: F401

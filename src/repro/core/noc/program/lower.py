@@ -224,7 +224,13 @@ def _run_op(prog, p, max_cycles, engine) -> ProgramResult:
 # ---------------------------------------------------------------------------
 
 
-def _run_barrier(prog, p, max_cycles, engine) -> ProgramResult:
+def _run_barrier(prog, p, max_cycles, engine, add=add_op,
+                 start_of=None) -> ProgramResult:
+    """Phase-serialized execution.  ``add`` lowers one op onto the live
+    sim — the default builds streams from scratch; the compile-once path
+    (:class:`CompiledWorkload`) passes an adder that instantiates cached
+    stream specs.  ``start_of`` overrides per-op start offsets (how
+    sweeps swap the injection rate without rebuilding the program)."""
     sim = NoCSim(prog.mesh, p)
     runs: list[tuple[int, OpRun]] = []
     phase_end: list[float] = []
@@ -242,14 +248,14 @@ def _run_barrier(prog, p, max_cycles, engine) -> ProgramResult:
                 # of its flavor; it serializes the phase boundary.
                 barrier_cost = max(barrier_cost, op.cost(p))
                 continue
-            start = offset + op.start
+            start = offset + (op.start if start_of is None else start_of(op))
             if isinstance(op, ComputeOp):
                 # Compute is analytic here: the barrier baseline fully
                 # serializes phases, so in-phase contention modeling of
                 # link-free intervals adds nothing.
                 analytic.append((op, start))
                 continue
-            st = add_op(sim, op, start, p)
+            st = add(sim, op, start, p)
             added.append((op, st, start))
         done: float = sim.run(max_cycles=max_cycles, engine=engine)
         for op, st, start in added:
@@ -342,3 +348,95 @@ def _run_window(prog, p, max_cycles, engine, overlap) -> ProgramResult:
         runs.append(OpRun(op, t0 + op.start, st.done_cycle))
     makespan = max((r.done_cycle for r in runs), default=0)
     return ProgramResult(makespan, runs, _phase_end(prog, runs))
+
+
+# ---------------------------------------------------------------------------
+# Compile-once workloads: cache the lowering, swap the injection clock.
+# ---------------------------------------------------------------------------
+
+
+class CompiledWorkload:
+    """One (mesh, params, program) lowered once, runnable many times.
+
+    Compiling a program resolves everything start-independent about its
+    streams — routes, multicast fork / reduction join trees, the
+    prereq/group graphs, virtual channels, packet ids, and the compiled
+    unit records (:class:`~repro.core.noc.netsim.StreamSpec`, whose unit
+    topology is shared across instantiations).  ``run`` then executes the
+    barrier-mode semantics bit-identically to
+    ``run_program(mode='barrier')`` while skipping all of that per call:
+    each op instantiates a fresh stream from its cached spec with only
+    the inject ``start`` recomputed.  ``start_of`` overrides per-op start
+    offsets — that is how ``traffic.sweep`` replays the same seeded
+    packet population across injection rates without re-lowering
+    (composing with its ``workers=N`` process fan-out: a worker compiles
+    once and amortizes over its chunk of sweep points).
+
+    Packet ids are consumed at compile time in the exact order the
+    direct path consumes them, so pid-keyed routing (o1turn) and
+    packet-mode VC slicing agree with uncompiled execution.
+    """
+
+    def __init__(
+        self,
+        prog: Program,
+        params: NoCParams | None = None,
+        routing: Optional[str] = None,
+        num_vcs: Optional[int] = None,
+    ):
+        prog.validate()
+        self.prog = prog
+        self.p = effective_params(prog, params, routing, num_vcs)
+        scratch = NoCSim(prog.mesh, self.p)
+        self._specs: dict[int, object] = {}
+        by_phase: dict[int, list[Op]] = {}
+        for op in prog.ops:
+            by_phase.setdefault(op.phase, []).append(op)
+        for phase in range(prog.num_phases):
+            for op in by_phase.get(phase, ()):
+                if isinstance(op, (BarrierOp, ComputeOp)):
+                    continue  # analytic in barrier mode — nothing to cache
+                if isinstance(op, UnicastOp):
+                    spec = scratch.unicast_spec(
+                        Coord(*op.src), Coord(*op.dst), op.nbytes)
+                elif isinstance(op, MulticastOp):
+                    spec = scratch.multicast_spec(
+                        Coord(*op.src), op.maddr, op.nbytes)
+                elif isinstance(op, ReductionOp):
+                    spec = scratch.reduction_spec(
+                        [Coord(*s) for s in op.sources], Coord(*op.dst),
+                        op.nbytes)
+                else:  # pragma: no cover - defensive
+                    raise ValueError(f"cannot compile op kind {op.kind!r}")
+                self._specs[op.id] = spec
+
+    def _add(self, sim: NoCSim, op: Op, start: float, p: NoCParams):
+        return self._specs[op.id].instantiate(sim, start)
+
+    def run(
+        self,
+        *,
+        max_cycles: int = 50_000_000,
+        engine: str = "heap",
+        start_of=None,
+    ) -> ProgramResult:
+        """Execute the compiled program (barrier-mode semantics)."""
+        return _run_barrier(
+            self.prog, self.p, max_cycles, engine,
+            add=self._add, start_of=start_of,
+        )
+
+
+def compile_workload(
+    source,
+    params: NoCParams | None = None,
+    routing: Optional[str] = None,
+    num_vcs: Optional[int] = None,
+) -> CompiledWorkload:
+    """Compile a :class:`Program` or a legacy :class:`Trace` once."""
+    if not isinstance(source, Program):
+        from repro.core.noc.program.ops import from_trace
+
+        source = from_trace(source)
+    return CompiledWorkload(source, params=params, routing=routing,
+                            num_vcs=num_vcs)

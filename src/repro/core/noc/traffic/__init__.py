@@ -27,10 +27,12 @@ both the trace tooling and program execution.
 from repro.core.noc.traffic.patterns import (  # noqa: F401
     PATTERNS,
     SyntheticConfig,
+    SyntheticPopulation,
     collective_storm,
     fcl_storm,
     mixed_storm,
     summa_storm,
+    synthetic_population,
     synthetic_trace,
 )
 from repro.core.noc.traffic.sweep import (  # noqa: F401

@@ -91,45 +91,85 @@ def _destination(
     return None if dst == src else dst
 
 
+@dataclasses.dataclass(frozen=True)
+class SyntheticPopulation:
+    """The rate-independent part of a synthetic workload.
+
+    Per source node, the seeded unit-rate inter-arrival gaps and drawn
+    destinations, in draw order (``dst=None`` records a consumed draw
+    that emitted no packet — fixed-point sources — so the time fold
+    stays identical to the one-shot generator).  ``trace_at`` applies an
+    injection rate by folding ``t += gap / rate`` exactly like
+    :func:`synthetic_trace`, so sweeping the rate replays the *same*
+    packet population under tighter spacing — the compile-once sweeps
+    recompute only these start offsets per point.
+    """
+
+    cols: int
+    rows: int
+    nbytes: int
+    draws: tuple  # per node: tuple of (unit gap, dst Coord | None)
+
+    def starts_at(self, rate: float) -> list[float]:
+        """Injection starts of the emitted packets at ``rate``, in event
+        order (exact float fold of the unit gaps)."""
+        out = []
+        for node_draws in self.draws:
+            t = 0.0
+            for gap, pair in node_draws:
+                t += gap / rate
+                if pair is not None:
+                    out.append(t)
+        return out
+
+    def trace_at(self, rate: float) -> Trace:
+        trace = Trace(self.cols, self.rows)
+        for node_draws in self.draws:
+            t = 0.0
+            for gap, pair in node_draws:
+                t += gap / rate
+                if pair is None:
+                    continue
+                src, dst = pair
+                trace.events.append(
+                    TrafficEvent(
+                        "unicast", start=t, nbytes=self.nbytes,
+                        src=tuple(src), dst=tuple(dst),
+                    )
+                )
+        return trace
+
+
+def synthetic_population(mesh: Mesh2D, cfg: SyntheticConfig) -> SyntheticPopulation:
+    """Draw the seeded packet population once (gaps + destinations); the
+    injection rate is applied later by :meth:`SyntheticPopulation.trace_at`.
+    Consumes the PRNG exactly like :func:`synthetic_trace`."""
+    rng = random.Random(cfg.seed)
+    draws = []
+    if cfg.pattern == "all_to_all":
+        for src in mesh.coords():
+            node = []
+            for dst in mesh.coords():
+                if dst == src:
+                    continue
+                node.append((rng.expovariate(1.0), (src, dst)))
+            draws.append(tuple(node))
+    else:
+        for src in mesh.coords():
+            node = []
+            for _ in range(cfg.packets_per_node):
+                gap = rng.expovariate(1.0)
+                dst = _destination(mesh, cfg, src, rng)
+                node.append((gap, None if dst is None else (src, dst)))
+            draws.append(tuple(node))
+    return SyntheticPopulation(
+        cols=mesh.cols, rows=mesh.rows, nbytes=cfg.nbytes, draws=tuple(draws)
+    )
+
+
 def synthetic_trace(mesh: Mesh2D, cfg: SyntheticConfig) -> Trace:
     """Generate one single-phase synthetic workload trace."""
-    rng = random.Random(cfg.seed)
-    trace = Trace(mesh.cols, mesh.rows)
-    if cfg.pattern == "all_to_all":
-        return _all_to_all_trace(mesh, cfg, rng, trace)
-    for src in mesh.coords():
-        t = 0.0
-        for _ in range(cfg.packets_per_node):
-            t += rng.expovariate(1.0) / cfg.rate
-            dst = _destination(mesh, cfg, src, rng)
-            if dst is None:
-                continue
-            trace.events.append(
-                TrafficEvent(
-                    "unicast", start=t, nbytes=cfg.nbytes,
-                    src=tuple(src), dst=tuple(dst),
-                )
-            )
-    return trace
-
-
-def _all_to_all_trace(
-    mesh: Mesh2D, cfg: SyntheticConfig, rng: random.Random, trace: Trace
-) -> Trace:
-    """Every node sends one packet to every other node, rate-staggered."""
-    for src in mesh.coords():
-        t = 0.0
-        for dst in mesh.coords():
-            if dst == src:
-                continue
-            t += rng.expovariate(1.0) / cfg.rate
-            trace.events.append(
-                TrafficEvent(
-                    "unicast", start=t, nbytes=cfg.nbytes,
-                    src=tuple(src), dst=tuple(dst),
-                )
-            )
-    return trace
+    return synthetic_population(mesh, cfg).trace_at(cfg.rate)
 
 
 # ---------------------------------------------------------------------------

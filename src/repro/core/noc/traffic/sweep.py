@@ -19,11 +19,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+import warnings
+from typing import Optional, Sequence
 
 from repro.core.noc.params import NoCParams
 from repro.core.topology import Mesh2D
-from repro.core.noc.traffic.patterns import SyntheticConfig, synthetic_trace
+from repro.core.noc.traffic.patterns import (
+    SyntheticConfig,
+    SyntheticPopulation,
+    synthetic_population,
+    synthetic_trace,
+)
 from repro.core.noc.traffic.trace import ReplayResult, replay
 
 
@@ -57,16 +63,7 @@ CSV_HEADER = (
 )
 
 
-def measure(
-    mesh: Mesh2D,
-    cfg: SyntheticConfig,
-    params: NoCParams | None = None,
-    engine: str = "heap",
-) -> SweepPoint:
-    """Replay one synthetic workload and aggregate its stream metrics."""
-    p = params or NoCParams()
-    trace = synthetic_trace(mesh, cfg)
-    res: ReplayResult = replay(trace, params=p, engine=engine)
+def _aggregate_point(mesh, cfg, res: ReplayResult, p: NoCParams) -> SweepPoint:
     beats = sum(p.beats(s.event.nbytes) for s in res.streams)
     makespan = max(res.makespan, 1)
     stats = res.stats()
@@ -83,10 +80,57 @@ def measure(
     )
 
 
-def _measure_task(args: tuple) -> SweepPoint:
-    """Top-level process-pool entry point (must be picklable)."""
-    mesh, cfg, params, engine = args
-    return measure(mesh, cfg, params=params, engine=engine)
+def measure(
+    mesh: Mesh2D,
+    cfg: SyntheticConfig,
+    params: NoCParams | None = None,
+    engine: str = "heap",
+    compiled=None,
+    population: Optional[SyntheticPopulation] = None,
+) -> SweepPoint:
+    """Replay one synthetic workload and aggregate its stream metrics.
+
+    With ``compiled`` (a :class:`~repro.core.noc.program.CompiledWorkload`
+    of this population's trace) and ``population``, only the injection
+    starts are recomputed for ``cfg.rate`` — routes, fork/join trees and
+    compiled unit records are reused.  Bit-identical to the uncompiled
+    path.
+    """
+    p = params or NoCParams()
+    if compiled is None or population is None:
+        trace = synthetic_trace(mesh, cfg)
+        res: ReplayResult = replay(trace, params=p, engine=engine)
+    else:
+        from repro.core.noc.traffic.trace import result_to_replay
+
+        starts = population.starts_at(cfg.rate)
+        pres = compiled.run(engine=engine,
+                            start_of=lambda op: starts[op.id])
+        res = result_to_replay(pres)
+    return _aggregate_point(mesh, cfg, res, p)
+
+
+def _sweep_chunk(args: tuple) -> list[SweepPoint]:
+    """Top-level process-pool entry point (must be picklable): one chunk
+    of sweep points, sharing a single compiled workload.  Each worker
+    compiles its population once and amortizes the lowering over every
+    rate in its chunk (the compile-once path)."""
+    mesh, cfgs, params, engine, compile_once = args
+    if not cfgs:
+        return []
+    if not compile_once:
+        return [measure(mesh, cfg, params=params, engine=engine)
+                for cfg in cfgs]
+    from repro.core.noc.program import compile_workload, from_trace
+
+    pop = synthetic_population(mesh, cfgs[0])
+    compiled = compile_workload(from_trace(pop.trace_at(cfgs[0].rate)),
+                                params=params)
+    return [
+        measure(mesh, cfg, params=params, engine=engine,
+                compiled=compiled, population=pop)
+        for cfg in cfgs
+    ]
 
 
 def saturation_sweep(
@@ -99,6 +143,7 @@ def saturation_sweep(
     params: NoCParams | None = None,
     engine: str = "heap",
     workers: int | None = None,
+    compile_once: bool = True,
     **pattern_kw,
 ) -> list[SweepPoint]:
     """Latency/throughput curve over ``rates`` for one pattern + seed.
@@ -107,8 +152,13 @@ def saturation_sweep(
     population, so ``workers > 1`` fans them out over a process pool
     (chunked to one submission per worker); results come back in rate
     order and are identical to a serial run.  This is what makes 64x64
-    curves a seconds-scale operation.  Falls back to serial execution if
-    the platform cannot spawn processes.
+    curves a seconds-scale operation.  ``compile_once`` (default) lowers
+    the population once per worker — routes, trees and compiled unit
+    records are cached in a
+    :class:`~repro.core.noc.program.CompiledWorkload` and only the
+    injection starts change per rate point; results are bit-identical
+    either way.  Falls back to serial execution (with a warning naming
+    the failure) if the platform cannot spawn processes.
     """
     cfgs = [
         SyntheticConfig(
@@ -120,18 +170,27 @@ def saturation_sweep(
     if workers and workers > 1 and len(cfgs) > 1:
         import concurrent.futures
 
-        tasks = [(mesh, cfg, params, engine) for cfg in cfgs]
-        nproc = min(workers, len(tasks))
+        nproc = min(workers, len(cfgs))
+        size = -(-len(cfgs) // nproc)
+        chunks = [cfgs[i:i + size] for i in range(0, len(cfgs), size)]
+        tasks = [(mesh, chunk, params, engine, compile_once)
+                 for chunk in chunks]
         try:
             with concurrent.futures.ProcessPoolExecutor(max_workers=nproc) as ex:
-                return list(
-                    ex.map(_measure_task, tasks,
-                           chunksize=max(1, len(tasks) // nproc))
-                )
+                return [pt for pts in ex.map(_sweep_chunk, tasks)
+                        for pt in pts]
         except (OSError, PermissionError, ImportError, NotImplementedError,
-                concurrent.futures.process.BrokenProcessPool):
-            pass  # sandboxed/fork-less/wasm platform: fall through to serial
-    return [measure(mesh, cfg, params=params, engine=engine) for cfg in cfgs]
+                concurrent.futures.process.BrokenProcessPool) as exc:
+            # sandboxed / fork-less / wasm platform: run serially instead —
+            # and say so, naming the cause, because the silent version of
+            # this fallback turns "why is my sweep slow" into archaeology.
+            warnings.warn(
+                f"saturation_sweep: process pool unavailable ({exc!r}); "
+                f"running {len(cfgs)} sweep points serially",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    return _sweep_chunk((mesh, cfgs, params, engine, compile_once))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -335,13 +335,22 @@ def replay(
     fall back to ``params``.
     """
     from repro.core.noc.program import from_trace, run_program
-    from repro.core.noc.program.ops import BarrierOp, op_to_event
 
     res = run_program(
         from_trace(trace), params=params, max_cycles=max_cycles,
         engine=engine, mode=mode, overlap=overlap, routing=routing,
         num_vcs=num_vcs,
     )
+    return result_to_replay(res)
+
+
+def result_to_replay(res) -> ReplayResult:
+    """Convert a :class:`~repro.core.noc.program.ProgramResult` into the
+    legacy :class:`ReplayResult` shape (phase-major stream order, barrier
+    ops dropped) — shared by :func:`replay` and the compile-once sweep
+    path."""
+    from repro.core.noc.program.ops import BarrierOp, op_to_event
+
     runs = sorted(
         (r for r in res.runs if not isinstance(r.op, BarrierOp)),
         key=lambda r: (r.op.phase, r.op.id),  # legacy phase-major order

@@ -387,3 +387,135 @@ def test_overlap_ring_traces_replay():
         rs = replay(matmul_rs_noc_trace(mesh, row, 2048), params=P)
     # bidirectional ring: half the sequential phases of the unidirectional
     assert ag.makespan < rs.makespan
+
+
+# ---------------------------------------------------------------------------
+# Compile-once sweeps (CompiledWorkload) + population refactor
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_population_reproduces_trace_bitwise():
+    from repro.core.noc.traffic import SyntheticConfig, synthetic_population
+
+    mesh = Mesh2D(8, 8)
+    for pattern in ("uniform", "hotspot", "transpose", "all_to_all"):
+        cfg = SyntheticConfig(pattern=pattern, rate=0.03, nbytes=512,
+                              packets_per_node=3, seed=7)
+        pop = synthetic_population(mesh, cfg)
+        direct = synthetic_trace(mesh, cfg)
+        assert pop.trace_at(cfg.rate).to_json() == direct.to_json(), pattern
+        # starts_at aligns 1:1 with the emitted events
+        assert pop.starts_at(cfg.rate) == [e.start for e in direct.events]
+
+
+def test_compile_once_sweep_identical_to_relowering():
+    from repro.core.noc.traffic.sweep import saturation_sweep
+
+    mesh = Mesh2D(8, 8)
+    rates = (0.01, 0.05, 0.2)
+    kw = dict(nbytes=256, packets_per_node=2, seed=1, params=P)
+    classic = saturation_sweep(mesh, "uniform", rates, compile_once=False, **kw)
+    compiled = saturation_sweep(mesh, "uniform", rates, compile_once=True, **kw)
+    assert compiled == classic
+    par = saturation_sweep(mesh, "uniform", rates, compile_once=True,
+                           workers=2, **kw)
+    assert par == classic
+
+
+def test_compiled_workload_run_matches_run_program_barrier():
+    from repro.core.noc.program import compile_workload, from_trace, run_program
+
+    trace = collective_storm(Mesh2D(8, 8), tile_bytes=1024, phases=2)
+    prog = from_trace(trace)
+    ref = run_program(prog, P, mode="barrier")
+    compiled = compile_workload(prog, params=P)
+    for _ in range(2):  # repeated runs reuse the cached specs
+        res = compiled.run()
+        assert [(r.inject_cycle, r.done_cycle) for r in res.runs] == \
+               [(r.inject_cycle, r.done_cycle) for r in ref.runs]
+        assert res.makespan == ref.makespan
+    # compiling straight from the trace is the same thing
+    res = compile_workload(trace, params=P).run()
+    assert res.makespan == ref.makespan
+
+
+def test_compiled_workload_respects_packet_mode_vcs_and_policy():
+    import dataclasses
+
+    from repro.core.noc.program import compile_workload, from_trace
+    from repro.core.noc.traffic.trace import result_to_replay
+
+    mesh = Mesh2D(8, 8)
+    cfg = SyntheticConfig(pattern="transpose", rate=0.05, nbytes=512,
+                          packets_per_node=2, seed=3)
+    p = dataclasses.replace(P, routing="o1turn", num_vcs=2,
+                            vc_select="packet")
+    trace = synthetic_trace(mesh, cfg)
+    ref = replay(trace, params=p)
+    got = result_to_replay(compile_workload(trace, params=p).run())
+    assert [s.done_cycle for s in got.streams] == \
+           [s.done_cycle for s in ref.streams]
+
+
+def test_sweep_pool_fallback_warns(monkeypatch):
+    import concurrent.futures
+
+    from repro.core.noc.traffic.sweep import saturation_sweep
+
+    class Broken:
+        def __init__(self, *a, **k):
+            raise OSError("pool refused")
+
+    monkeypatch.setattr(concurrent.futures, "ProcessPoolExecutor", Broken)
+    mesh = Mesh2D(4, 4)
+    rates = (0.05, 0.2)
+    with pytest.warns(RuntimeWarning, match="pool refused"):
+        pts = saturation_sweep(mesh, "uniform", rates, params=P, workers=4)
+    assert pts == saturation_sweep(mesh, "uniform", rates, params=P)
+
+
+# ---------------------------------------------------------------------------
+# Calibration fitting: recover alpha0/beta from measured curves
+# ---------------------------------------------------------------------------
+
+
+def _fit_curves(truth, mesh, rates, sizes):
+    from repro.core.noc.traffic.sweep import saturation_sweep
+
+    return {
+        nbytes: saturation_sweep(mesh, "uniform", rates, nbytes=nbytes,
+                                 packets_per_node=2, seed=0, params=truth)
+        for nbytes in sizes
+    }
+
+
+def test_fit_claims_round_trips_synthetic_curves():
+    import dataclasses
+
+    from repro.core.noc.calibrate import fit_claims, population_mean_hops
+
+    mesh = Mesh2D(8, 8)
+    rates = (0.002, 0.005, 0.01)
+    mh = population_mean_hops(mesh, SyntheticConfig(
+        pattern="uniform", rate=0.01, packets_per_node=2, seed=0))
+    for truth in (P, dataclasses.replace(P, alpha0=20.0),
+                  dataclasses.replace(P, beta=2.0)):
+        curves = _fit_curves(truth, mesh, rates, (64, 1024, 4096))
+        fit = fit_claims(curves, mh, params=truth)
+        assert abs(fit.alpha0 - truth.alpha0) <= 0.15 * truth.alpha0, fit
+        assert abs(fit.beta - truth.beta) <= 0.15 * truth.beta, fit
+        assert all(c.ok for c in fit.claims(truth))
+        assert fit.residual < 2.0
+        # a deliberately wrong calibration is rejected
+        wrong = dataclasses.replace(truth, alpha0=truth.alpha0 * 2,
+                                    beta=truth.beta * 3)
+        assert not all(c.ok for c in fit.claims(wrong))
+
+
+def test_fit_claims_needs_two_payload_sizes():
+    from repro.core.noc.calibrate import fit_claims
+
+    mesh = Mesh2D(4, 4)
+    curves = _fit_curves(P, mesh, (0.01, 0.05), (1024,))
+    with pytest.raises(ValueError, match="payload sizes"):
+        fit_claims(curves, 2.0, params=P)
