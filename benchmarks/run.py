@@ -20,6 +20,7 @@ MODULES = [
     ("Traffic", "benchmarks.bench_traffic"),
     ("Engine", "benchmarks.bench_engine"),
     ("Routing", "benchmarks.bench_routing"),
+    ("Faults", "benchmarks.bench_faults"),
     ("Program", "benchmarks.bench_program"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),

@@ -114,6 +114,36 @@
                                       ``compare_policies`` reports the
                                       saturation-point shift per
                                       (routing policy, VC count)
+``faults``    — fault-injection subsystem (degraded-mesh execution):
+                ``faults.model``    seedable ``FaultSet`` (dead links,
+                                    dead routers, flaky links with
+                                    duty-cycle retry cost as exact
+                                    per-edge Fraction rates, CRC-32
+                                    jitter); serializes into the
+                                    trace/program stamp for
+                                    bit-identical replay;
+                                    ``NoCParams.faults`` hooks it into
+                                    every engine at stream-construction
+                                    time (the zero-fault path is
+                                    untouched); ``surviving_submesh`` /
+                                    ``degrade_program`` are the fabric
+                                    mirror of ``runtime/elastic.py``
+                ``faults.repair``   detour routing around dead elements
+                                    on the odd-even turn model with a
+                                    dedicated escape VC when
+                                    ``num_vcs`` affords one, structural
+                                    O(nodes) min-VC bounds
+                                    (``fast_min_vcs``) agreeing with
+                                    the exact enumeration, and the
+                                    exact per-VC channel-dependency
+                                    gate (``verify_route_deps``) every
+                                    degraded run passes before
+                                    executing
+                ``faults.regraft``  multicast fork / reduction join
+                                    trees rebuilt around faulted nodes
+                                    (deepest / first-intersection
+                                    grafting) with out-tree/in-tree
+                                    validity checkers
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper, plus
                 ``load_claims``: saturation-aware checks of a sweep

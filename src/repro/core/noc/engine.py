@@ -103,6 +103,12 @@ class EngineProfile:
     boundary_reconciliations: int = 0  # shard: boundary arrivals shipped
     regions: int = 0               # shard: region count
     workers: int = 0               # shard: worker processes used (0=serial)
+    # Fault-injection counters (0 on a pristine mesh): accumulated at
+    # stream construction time by NoCSim and copied here so degraded runs
+    # are observable in run(profile=True) output and bench rows.
+    retries_paid: int = 0          # beat crossings that paid a flaky retry
+    detoured_routes: int = 0       # unicasts re-routed around dead elements
+    regrafted_trees: int = 0       # fork/join trees rebuilt around faults
 
     def counters(self) -> dict:
         d = dataclasses.asdict(self)
@@ -122,18 +128,35 @@ def gate_dependents(streams: Sequence["_StreamState"]) -> dict[int, list["_Strea
 
 def stuck_error(sim: "NoCSim", kind: str, t: int, stuck: Sequence["_StreamState"]) -> RuntimeError:
     """Build the deadlock/timeout error: name the stuck streams, their
-    final-edge frontier beats and the blocking edges, not just the cycle."""
+    final-edge frontier beats and the blocking edges, not just the cycle.
+
+    With faults active the report additionally names the faulted
+    links/routers adjacent to the stuck frontier and says so in the
+    headline — distinguishing "deadlocked" from "destination unreachable
+    under current faults" at a glance."""
     idx = {id(s): i for i, s in enumerate(sim.streams)}
+    faults = getattr(sim, "faults", None)
     lines = []
     for s in stuck[:4]:
         lines.append(f"  stream#{idx.get(id(s), '?')}: {s.stall_report()}")
     more = len(stuck) - 4
     if more > 0:
         lines.append(f"  ... and {more} more stuck stream(s)")
+    if faults is not None:
+        frontier = {c for s in stuck for e in s.edges() for c in e}
+        implicated = faults.implicated(frontier)
+        lines.append(f"  faults active ({faults.describe()})")
+        if implicated:
+            lines.append(
+                "  implicated at the stuck frontier: "
+                + "; ".join(implicated[:6]))
+    else:
+        lines.append("  no faults active")
     detail = "\n".join(lines)
     return RuntimeError(
-        f"netsim {kind} at cycle {t}: {len(stuck)} of {len(sim.streams)} "
-        f"stream(s) cannot advance\n{detail}"
+        f"netsim {kind} at cycle {t}"
+        f"{' under active faults' if faults is not None else ''}: "
+        f"{len(stuck)} of {len(sim.streams)} stream(s) cannot advance\n{detail}"
     )
 
 

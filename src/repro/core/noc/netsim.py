@@ -35,8 +35,15 @@ from fractions import Fraction
 from typing import Optional, Sequence
 
 from repro.core.noc.engine import run_event_driven, run_heap
+from repro.core.noc.faults.regraft import fork_tree_degraded, join_tree_degraded
+from repro.core.noc.faults.repair import (
+    escape_vc as _escape_vc_of,
+    repair_route,
+    verify_route_deps,
+)
 from repro.core.noc.params import NoCParams
 from repro.core.noc.routing import fork_tree, get_policy, join_tree
+from repro.core.noc.routing.turns import route_turns
 from repro.core.topology import Coord, Mesh2D, MultiAddress
 
 Edge = tuple[Coord, Coord]  # (from_node, to_node); from==to encodes local inject/eject
@@ -569,6 +576,12 @@ class StreamSpec:
     inject_rate: float
     finals: list
     vc: int = 0
+    # Fault bookkeeping, resolved at spec-build time and *applied at
+    # instantiation* — compiled workloads build specs on a scratch sim but
+    # instantiate into the running one, so counters and CDG dependencies
+    # must travel on the spec to land in the sim that actually runs.
+    fault_meta: Optional[dict] = None          # EngineProfile counter deltas
+    fault_deps: Optional[tuple] = None         # (vc, link-dependency tuple)
     _topology: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     def instantiate(self, sim: "NoCSim", start: float) -> "_StreamState":
@@ -591,23 +604,62 @@ class StreamSpec:
             self._topology = st._topology()
         else:
             st._adopt_topology(self._topology)
+        if self.fault_meta is not None:
+            for k, v in self.fault_meta.items():
+                sim._fault_counts[k] = sim._fault_counts.get(k, 0) + v
+        if self.fault_deps is not None:
+            vc, deps = self.fault_deps
+            sim._fault_deps.setdefault(vc, set()).update(deps)
+            sim._fault_deps_dirty = True
         sim.streams.append(st)
         return st
 
 
-def _unicast_structure(mesh, policy, src: Coord, dst: Coord, pid: int):
+def _flaky_rates(faults, rate: dict, edges) -> int:
+    """Fold the expected flaky-link retry penalty (exact Fraction, seeded
+    jitter — see ``faults.model.FaultSet.flaky_penalty``) into the
+    per-edge beat rates; returns the number of flaky link edges touched.
+    Self/sink edges never traverse a physical link and pay nothing."""
+    n = 0
+    for e in edges:
+        a, b = e
+        if a == b or b.x < 0 or b.y < 0:
+            continue
+        pen = faults.flaky_penalty(a, b)
+        if pen:
+            rate[e] = _frac(rate.get(e, 1)) + pen
+            n += 1
+    return n
+
+
+def _unicast_structure(mesh, policy, src: Coord, dst: Coord, pid: int,
+                       faults=None):
     """Chain structure of a policy-routed unicast; returns (prereqs, groups,
-    finals, inject_edge)."""
-    path = policy.route(mesh, src, dst, pid)
+    finals, inject_edge, path, detoured).  Under faults the route comes
+    from ``faults.repair`` (base route when healthy, odd-even-legal
+    detour otherwise)."""
+    if faults is None:
+        path = policy.route(mesh, src, dst, pid)
+        detoured = False
+    else:
+        path, detoured = repair_route(mesh, faults, policy, src, dst, pid)
     edges: list[Edge] = [(src, src)] + list(zip(path, path[1:])) + [(dst, dst)]
     prereqs, groups = _chain(edges)
-    return prereqs, groups, [edges[-1]], edges[0]
+    return prereqs, groups, [edges[-1]], edges[0], path, detoured
 
 
-def _multicast_structure(mesh, policy, src: Coord, maddr: MultiAddress):
+def _multicast_structure(mesh, policy, src: Coord, maddr: MultiAddress,
+                         faults=None):
     """Fork-tree structure of a multicast; returns (prereqs, groups, finals,
-    inject_edge).  Fork groups advance in lockstep (Section 3.1.2)."""
-    fork = fork_tree(mesh, src, maddr, policy=policy)
+    inject_edge, regraft_info).  Fork groups advance in lockstep (Section
+    3.1.2).  Under faults the tree is re-grafted around dead elements
+    (dead destinations drop out of the tree and hence out of ``finals``)."""
+    if faults is None:
+        fork = fork_tree(mesh, src, maddr, policy=policy)
+        info = None
+    else:
+        fork, info = fork_tree_degraded(
+            mesh, src, maddr, policy=policy, faults=faults)
     # fork maps router -> set(next hops); local delivery encoded as self.
     children: dict[Coord, list[Coord]] = {
         k: sorted(v, key=tuple) for k, v in fork.items()
@@ -638,14 +690,22 @@ def _multicast_structure(mesh, policy, src: Coord, maddr: MultiAddress):
             groups.append(group)
     dests = maddr.destinations(mesh)
     finals = [(d, d) for d in dests if (d, d) in prereqs]
-    return prereqs, groups, finals or [inject_edge], inject_edge
+    return prereqs, groups, finals or [inject_edge], inject_edge, info
 
 
-def _reduction_structure(mesh, policy, sources: tuple[Coord, ...], dst: Coord):
+def _reduction_structure(mesh, policy, sources: tuple[Coord, ...], dst: Coord,
+                         faults=None):
     """Join-tree structure of a wide reduction; returns (prereqs, groups,
-    rate, finals, inject_edges).  A router with ``f`` selected inputs
-    sustains one fully-reduced beat per ``f - 1`` cycles (Section 3.1.4)."""
-    join = join_tree(mesh, list(sources), dst, policy=policy)
+    rate, finals, inject_edges, regraft_info).  A router with ``f``
+    selected inputs sustains one fully-reduced beat per ``f - 1`` cycles
+    (Section 3.1.4).  Under faults the join tree is re-grafted (dead
+    sources drop their contribution)."""
+    if faults is None:
+        join = join_tree(mesh, list(sources), dst, policy=policy)
+        info = None
+    else:
+        join, info = join_tree_degraded(
+            mesh, list(sources), dst, policy=policy, faults=faults)
     # join maps router -> set(inputs); input==router encodes local source.
     prereqs: dict[Edge, list[Edge]] = {}
     rate: dict[Edge, float] = {}
@@ -693,7 +753,7 @@ def _reduction_structure(mesh, policy, sources: tuple[Coord, ...], dst: Coord):
             rate[sink] = float(f - 1)
         groups.append([sink])
         eject = sink
-    return prereqs, groups, rate, [eject], tuple(inject_edges)
+    return prereqs, groups, rate, [eject], tuple(inject_edges), info
 
 
 class NoCSim:
@@ -703,6 +763,22 @@ class NoCSim:
         self.mesh = mesh
         self.p = params or NoCParams()
         self.policy = get_policy(self.p.routing)
+        # Fault injection: NoCParams.faults (None or an empty FaultSet,
+        # which params normalizes to None, keeps this sim bit-identical
+        # to the historical fault-free behavior).  Faults resolve during
+        # stream construction — detours, tree re-grafts, flaky rate
+        # penalties — so every engine honors them identically.
+        self.faults = self.p.faults
+        self._fault_counts: dict[str, int] = {
+            "retries_paid": 0, "detoured_routes": 0, "regrafted_trees": 0,
+        }
+        self._fault_deps: dict[int, set] = {}   # vc -> link dependencies
+        self._fault_deps_dirty = False
+        self._escape_vc: Optional[int] = None
+        if self.faults is not None:
+            self.faults.validate_for(mesh)
+            self._escape_vc = _escape_vc_of(self.p.routing, mesh,
+                                            self.p.num_vcs)
         self.streams: list[_StreamState] = []
         self._atomic_busy_until = 0  # shared RMW unit for the SW barrier
         self._rr = 0  # round-robin arbitration counter, one slot per cycle
@@ -739,19 +815,36 @@ class NoCSim:
         compiled and direct lowering of the same op sequence agree)."""
         pid = self._pkt_seq
         self._pkt_seq += 1
-        prereqs, groups, finals, inject_edge = _unicast_structure(
-            self.mesh, self.policy, src, dst, pid
+        prereqs, groups, finals, inject_edge, path, detoured = (
+            _unicast_structure(
+                self.mesh, self.policy, src, dst, pid, self.faults
+            )
         )
+        n_beats = self.p.beats(nbytes)
+        rate: dict = {}
+        vc = self.p.vc_of("unicast", packet_id=pid)
+        meta = deps = None
+        if self.faults is not None:
+            n_flaky = _flaky_rates(self.faults, rate, prereqs)
+            if detoured and self._escape_vc is not None:
+                vc = self._escape_vc  # escape VC: odd-even-legal routes only
+            meta = {"retries_paid": n_beats * n_flaky,
+                    "detoured_routes": int(detoured)}
+            deps = (vc, tuple(route_turns(path)))
         return StreamSpec(
-            n_beats=self.p.beats(nbytes),
+            n_beats=n_beats,
             prereqs=prereqs,
             groups=groups,
-            rate={},
+            rate=rate,
             inject_edges=(inject_edge,),
-            inject_offset=self.p.alpha(self.mesh.hops(src, dst)),
+            # len(path)-1 == the Manhattan hop count for every healthy
+            # (minimal) route; detours pay their true hop count.
+            inject_offset=self.p.alpha(len(path) - 1),
             inject_rate=self.p.beta,
             finals=finals,
-            vc=self.p.vc_of("unicast", packet_id=pid),
+            vc=vc,
+            fault_meta=meta,
+            fault_deps=deps,
         )
 
     def add_multicast(self, src: Coord, maddr: MultiAddress, nbytes: int, start: float = 0.0):
@@ -760,19 +853,27 @@ class NoCSim:
         return spec.instantiate(self, start)
 
     def multicast_spec(self, src: Coord, maddr: MultiAddress, nbytes: int) -> StreamSpec:
-        prereqs, groups, finals, inject_edge = _multicast_structure(
-            self.mesh, self.policy, src, maddr
+        prereqs, groups, finals, inject_edge, info = _multicast_structure(
+            self.mesh, self.policy, src, maddr, self.faults
         )
+        n_beats = self.p.beats(nbytes)
+        rate: dict = {}
+        meta = None
+        if self.faults is not None:
+            n_flaky = _flaky_rates(self.faults, rate, prereqs)
+            meta = {"retries_paid": n_beats * n_flaky,
+                    "regrafted_trees": int(info.changed)}
         return StreamSpec(
-            n_beats=self.p.beats(nbytes),
+            n_beats=n_beats,
             prereqs=prereqs,
             groups=groups,
-            rate={},
+            rate=rate,
             inject_edges=(inject_edge,),
             inject_offset=self.p.alpha(1),
             inject_rate=self.p.beta,
             finals=finals,
             vc=self.p.vc_of("multicast"),
+            fault_meta=meta,
         )
 
     def add_reduction(
@@ -801,11 +902,19 @@ class NoCSim:
         inject_alpha: float | None = None,
         traffic_class: str = "reduction",
     ) -> StreamSpec:
-        prereqs, groups, rate, finals, inject_edges = _reduction_structure(
-            self.mesh, self.policy, tuple(sources), dst
+        prereqs, groups, rate, finals, inject_edges, info = (
+            _reduction_structure(
+                self.mesh, self.policy, tuple(sources), dst, self.faults
+            )
         )
+        n_beats = self.p.beats(nbytes)
+        meta = None
+        if self.faults is not None:
+            n_flaky = _flaky_rates(self.faults, rate, prereqs)
+            meta = {"retries_paid": n_beats * n_flaky,
+                    "regrafted_trees": int(info.changed)}
         return StreamSpec(
-            n_beats=self.p.beats(nbytes),
+            n_beats=n_beats,
             prereqs=prereqs,
             groups=groups,
             rate=rate,
@@ -814,6 +923,7 @@ class NoCSim:
             inject_rate=self.p.beta,
             finals=finals,
             vc=self.p.vc_of(traffic_class),
+            fault_meta=meta,
         )
 
     def add_timed(self, at: Coord, cycles: float, start: float = 0.0):
@@ -866,6 +976,16 @@ class NoCSim:
         """
         from repro.core.noc.engine import EngineProfile
 
+        # Exact deadlock gate for degraded runs: the unicast routes this
+        # workload actually uses (base + detours) must have an acyclic
+        # channel dependency graph per VC.  The escape-VC placement makes
+        # this pass structurally when num_vcs affords it; otherwise this
+        # raises RepairDeadlockError naming the VC count that would.
+        if self.faults is not None and self._fault_deps_dirty:
+            self._fault_deps_dirty = False
+            verify_route_deps(self._fault_deps, self.p.routing, self.mesh,
+                              self.p.num_vcs)
+
         prof = EngineProfile(engine=engine) if profile else None
         if engine == "heap":
             makespan = run_heap(self, max_cycles, prof)
@@ -882,6 +1002,10 @@ class NoCSim:
             raise ValueError(f"unknown engine {engine!r}")
         if prof is not None:
             prof.makespan = makespan
+            fc = self._fault_counts
+            prof.retries_paid = fc["retries_paid"]
+            prof.detoured_routes = fc["detoured_routes"]
+            prof.regrafted_trees = fc["regrafted_trees"]
             self.last_profile = prof
             return prof
         return makespan

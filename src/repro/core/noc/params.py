@@ -79,7 +79,21 @@ class NoCParams:
     # tiles in parallel.  (Section 4.3.1 discussion; see DESIGN.md.)
     sw_gemm_serializes_ab: bool = True
 
+    # -- fault injection ---------------------------------------------------
+    # A repro.core.noc.faults.FaultSet (or None = pristine mesh).  Typed
+    # loosely so this module stays import-light; NoCSim validates it
+    # against the mesh and resolves detours/re-grafts/flaky penalties at
+    # stream construction time, keeping all engines bit-identical on the
+    # same faulted run.  Declared last so positional construction of the
+    # historical fields is unchanged.
+    faults: object | None = None
+
     def __post_init__(self):
+        # An empty FaultSet is the pristine mesh: normalize to None so
+        # the zero-fault path is bit-identical (and hash-identical) to
+        # the historical parameters by construction.
+        if self.faults is not None and getattr(self.faults, "empty", False):
+            object.__setattr__(self, "faults", None)
         if self.num_vcs < 1:
             raise ValueError(f"num_vcs must be >= 1, got {self.num_vcs}")
         if self.vc_select not in ("class", "packet"):

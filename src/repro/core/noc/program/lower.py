@@ -133,6 +133,12 @@ def effective_params(
         and all(vc < effective_vcs for _, vc in prog.vc_map)
     ):
         updates["vc_map"] = prog.vc_map
+    # A program/trace captured on a faulted mesh replays under those
+    # faults: like vc_select, there is no explicit override argument,
+    # so the stamp wins whenever present (drop the stamp via
+    # dataclasses.replace(prog, faults=None) to replay pristine).
+    if prog.faults is not None and prog.faults != p.faults:
+        updates["faults"] = prog.faults
     return dataclasses.replace(p, **updates) if updates else p
 
 
@@ -176,6 +182,22 @@ def run_program(
     # indexing instead of raising.
     prog.validate()
     p = effective_params(prog, params, routing, num_vcs)
+    if prog.routing is not None:
+        from repro.core.noc.faults.repair import fast_min_vcs
+
+        need = fast_min_vcs(p.routing, prog.mesh)
+        if p.num_vcs < need:
+            import warnings
+
+            warnings.warn(
+                f"trace/program stamped with routing policy {p.routing!r}, "
+                f"which is not deadlock-free at num_vcs={p.num_vcs} "
+                f"(needs >= {need} VCs on {prog.cols}x{prog.rows}); "
+                "re-run with num_vcs >= that, or expect the engines' "
+                "stuck detection to raise on a deadlocked schedule",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     if mode == "op":
         return _run_op(prog, p, max_cycles, engine)
     if mode == "window":

@@ -255,6 +255,10 @@ class Program:
     num_vcs: Optional[int] = None
     vc_select: Optional[str] = None
     vc_map: Optional[tuple[tuple[str, int], ...]] = None
+    # Fault pattern the program runs under (a faults.FaultSet, or None =
+    # pristine mesh).  Serialized only when present, so fault-free
+    # programs keep the exact historical v3 JSON bytes.
+    faults: Optional[object] = None
 
     @property
     def mesh(self) -> Mesh2D:
@@ -288,20 +292,22 @@ class Program:
     # -- serialization (trace schema v3) -----------------------------------
 
     def to_json(self, indent: int | None = None) -> str:
-        return json.dumps(
-            {
-                "version": PROGRAM_VERSION,
-                "cols": self.cols,
-                "rows": self.rows,
-                "routing": self.routing,
-                "num_vcs": self.num_vcs,
-                "vc_select": self.vc_select,
-                "vc_map": [list(p) for p in self.vc_map]
-                if self.vc_map is not None else None,
-                "ops": [op.to_dict() for op in self.ops],
-            },
-            indent=indent,
-        )
+        d = {
+            "version": PROGRAM_VERSION,
+            "cols": self.cols,
+            "rows": self.rows,
+            "routing": self.routing,
+            "num_vcs": self.num_vcs,
+            "vc_select": self.vc_select,
+            "vc_map": [list(p) for p in self.vc_map]
+            if self.vc_map is not None else None,
+            "ops": [op.to_dict() for op in self.ops],
+        }
+        if self.faults is not None:
+            # Only when present: fault-free programs keep the exact
+            # historical JSON bytes (golden sha256s depend on it).
+            d["faults"] = self.faults.to_dict()
+        return json.dumps(d, indent=indent)
 
     @staticmethod
     def from_json(s: str) -> "Program":
@@ -318,6 +324,11 @@ class Program:
                 "version 3 files serialize programs and need an 'ops' list "
                 "(flat 'events' traces are schema v1/v2)")
         vc_map = d.get("vc_map")
+        faults = d.get("faults")
+        if faults is not None:
+            from repro.core.noc.faults.model import FaultSet
+
+            faults = FaultSet.from_dict(faults)
         return Program(
             cols=int(d["cols"]),
             rows=int(d["rows"]),
@@ -327,6 +338,7 @@ class Program:
             vc_select=d.get("vc_select"),
             vc_map=tuple((str(c), int(vc)) for c, vc in vc_map)
             if vc_map is not None else None,
+            faults=faults,
         ).validate()
 
     # -- trace interop ------------------------------------------------------
@@ -360,6 +372,7 @@ class Program:
             events=[op_to_event(op) for op in self.ops],
             routing=self.routing, num_vcs=self.num_vcs,
             vc_select=self.vc_select, vc_map=self.vc_map,
+            faults=self.faults,
         )
 
     def to_events(self) -> list[TrafficEvent]:
@@ -395,7 +408,7 @@ class Program:
                 repl[op.id] = tuple(eff)
         return Program(self.cols, self.rows, ops, routing=self.routing,
                        num_vcs=self.num_vcs, vc_select=self.vc_select,
-                       vc_map=self.vc_map)
+                       vc_map=self.vc_map, faults=self.faults)
 
     def comm_only(self) -> "Program":
         """Fabric traffic only (computes dropped, deps rewired through)."""
@@ -445,4 +458,4 @@ def from_trace(trace: Trace) -> Program:
     ]
     return Program(trace.cols, trace.rows, ops, routing=trace.routing,
                    num_vcs=trace.num_vcs, vc_select=trace.vc_select,
-                   vc_map=trace.vc_map)
+                   vc_map=trace.vc_map, faults=trace.faults)

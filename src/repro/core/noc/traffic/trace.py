@@ -110,6 +110,11 @@ class Trace:
     num_vcs: Optional[int] = None
     vc_select: Optional[str] = None
     vc_map: Optional[tuple[tuple[str, int], ...]] = None
+    # Fault pattern the trace was captured under (a faults.FaultSet, or
+    # None = pristine mesh), so degraded runs replay bit-identically.
+    # Serialized only when present — fault-free traces keep the exact
+    # historical JSON (and sha256 fingerprints).
+    faults: Optional[object] = None
 
     @property
     def mesh(self) -> Mesh2D:
@@ -126,20 +131,22 @@ class Trace:
         return sum(e.nbytes for e in self.events if e.kind != "barrier")
 
     def to_json(self, indent: int | None = None) -> str:
-        return json.dumps(
-            {
-                "version": TRACE_VERSION,
-                "cols": self.cols,
-                "rows": self.rows,
-                "routing": self.routing,
-                "num_vcs": self.num_vcs,
-                "vc_select": self.vc_select,
-                "vc_map": [list(p) for p in self.vc_map]
-                if self.vc_map is not None else None,
-                "events": [e.to_dict() for e in self.events],
-            },
-            indent=indent,
-        )
+        d = {
+            "version": TRACE_VERSION,
+            "cols": self.cols,
+            "rows": self.rows,
+            "routing": self.routing,
+            "num_vcs": self.num_vcs,
+            "vc_select": self.vc_select,
+            "vc_map": [list(p) for p in self.vc_map]
+            if self.vc_map is not None else None,
+            "events": [e.to_dict() for e in self.events],
+        }
+        if self.faults is not None:
+            # Emitted only when present: fault-free traces serialize to
+            # the exact historical bytes (golden sha256s depend on it).
+            d["faults"] = self.faults.to_dict()
+        return json.dumps(d, indent=indent)
 
     @staticmethod
     def from_json(s: str) -> "Trace":
@@ -159,6 +166,11 @@ class Trace:
         # defaults.
         v2 = version >= 2
         vc_map = d.get("vc_map") if v2 else None
+        faults = d.get("faults") if v2 else None
+        if faults is not None:
+            from repro.core.noc.faults.model import FaultSet
+
+            faults = FaultSet.from_dict(faults)
         return Trace(
             cols=int(d["cols"]),
             rows=int(d["rows"]),
@@ -169,6 +181,7 @@ class Trace:
             vc_select=d.get("vc_select") if v2 else None,
             vc_map=tuple((str(c), int(vc)) for c, vc in vc_map)
             if vc_map is not None else None,
+            faults=faults,
         )
 
 
@@ -195,6 +208,7 @@ class TraceRecorder:
         rec.trace.num_vcs = sim.p.num_vcs
         rec.trace.vc_select = sim.p.vc_select
         rec.trace.vc_map = sim.p.vc_map
+        rec.trace.faults = sim.faults
         sim.recorders.append(rec)
         return rec
 

@@ -1,0 +1,509 @@
+"""Fault-injection subsystem: fault models, degraded-mesh repair routing,
+collective-tree re-grafting, engine bit-identity under faults, and the
+trace/program fault stamp."""
+
+import dataclasses
+import json
+import random
+
+import pytest
+
+from repro.core.noc.faults import (
+    FaultDisconnectedError,
+    FaultSet,
+    FlakyLink,
+    RepairDeadlockError,
+    check_fork_tree,
+    check_join_tree,
+    degrade_program,
+    detour_route,
+    escape_vc,
+    fast_min_vcs,
+    fork_tree_degraded,
+    join_tree_degraded,
+    repair_route,
+    surviving_submesh,
+    verify_repair,
+    verify_route_deps,
+)
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import NoCParams
+from repro.core.noc.program import Program, from_trace, run_program
+from repro.core.noc.program.builder import ProgramBuilder
+from repro.core.noc.routing import get_policy, min_vcs_for_deadlock_freedom
+from repro.core.noc.traffic.trace import Trace, TraceRecorder, replay
+from repro.core.topology import Coord, Mesh2D, multi_address_for
+
+MESH8 = Mesh2D(8, 8)
+ENGINES = ("cycle", "event", "heap", "shard:2x2:1")
+
+
+# ---------------------------------------------------------------------------
+# FaultSet model
+# ---------------------------------------------------------------------------
+
+
+def test_faultset_canonicalizes_and_round_trips():
+    fs = FaultSet(
+        dead_links=((Coord(3, 3), Coord(2, 3)), (Coord(2, 3), Coord(3, 3))),
+        dead_routers=(Coord(5, 5), Coord(5, 5), Coord(1, 0)),
+        flaky_links=(FlakyLink(Coord(4, 4), Coord(4, 3), duty=0.5),),
+        seed=9,
+    )
+    # Links sorted-pair canonical, dup links/routers deduplicated.
+    assert fs.dead_links == ((Coord(2, 3), Coord(3, 3)),)
+    assert fs.dead_routers == (Coord(1, 0), Coord(5, 5))
+    assert fs.flaky_links[0].a == Coord(4, 3)  # endpoints normalized
+    assert FaultSet.from_dict(fs.to_dict()) == fs
+    assert hash(FaultSet.from_dict(fs.to_dict())) == hash(fs)
+    assert fs.link_is_dead(Coord(3, 3), Coord(2, 3))
+    assert fs.link_is_dead(Coord(5, 5), Coord(5, 4))  # incident to dead router
+    assert not fs.link_is_dead(Coord(0, 0), Coord(0, 1))
+
+
+def test_faultset_rejects_inconsistent_patterns():
+    with pytest.raises(ValueError, match="duplicate flaky"):
+        FaultSet(flaky_links=(FlakyLink(Coord(0, 0), Coord(1, 0)),
+                              FlakyLink(Coord(1, 0), Coord(0, 0))))
+    with pytest.raises(ValueError, match="both dead and flaky"):
+        FaultSet(dead_links=((Coord(0, 0), Coord(1, 0)),),
+                 flaky_links=(FlakyLink(Coord(0, 0), Coord(1, 0)),))
+    with pytest.raises(ValueError, match="outside mesh"):
+        FaultSet(dead_routers=(Coord(9, 0),)).validate_for(MESH8)
+    with pytest.raises(ValueError, match="not a mesh link"):
+        FaultSet(dead_links=((Coord(0, 0), Coord(2, 0)),)).validate_for(MESH8)
+    with pytest.raises(ValueError, match="duty"):
+        FlakyLink(Coord(0, 0), Coord(1, 0), duty=0.0)
+
+
+def test_empty_faultset_normalizes_to_none_in_params():
+    p = NoCParams(faults=FaultSet())
+    assert p.faults is None
+    assert p == NoCParams()
+    assert hash(p) == hash(NoCParams())
+
+
+def test_sample_keeps_mesh_connected():
+    for seed in range(6):
+        fs = FaultSet.sample(MESH8, dead_links=4, dead_routers=2,
+                             flaky_links=3, seed=seed)
+        fs.validate_for(MESH8)
+        assert len(fs.dead_links) == 4
+        assert len(fs.dead_routers) == 2
+        assert len(fs.flaky_links) == 3
+        assert not fs.unreachable_tiles(MESH8)
+
+
+def test_flaky_penalty_is_exact_deterministic_fraction():
+    from fractions import Fraction
+
+    fs = FaultSet(flaky_links=(FlakyLink(Coord(1, 1), Coord(2, 1),
+                                         duty=0.5, retry_cycles=4.0),),
+                  seed=3)
+    pen = fs.flaky_penalty(Coord(2, 1), Coord(1, 1))  # either direction
+    assert isinstance(pen, Fraction)
+    assert pen == fs.flaky_penalty(Coord(1, 1), Coord(2, 1))
+    # duty=0.5 -> 1 expected retry of 4 cycles, scaled by jitter in
+    # [24/32, 39/32].
+    assert Fraction(3) <= pen <= Fraction(39, 8)
+    assert fs.flaky_penalty(Coord(0, 0), Coord(1, 0)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Repair routing
+# ---------------------------------------------------------------------------
+
+
+def test_dead_link_forces_detour_and_route_avoids_faults():
+    # Kill the XY route's east link out of (3, 0).
+    fs = FaultSet(dead_links=((Coord(3, 0), Coord(4, 0)),))
+    path, detoured = repair_route(MESH8, fs, get_policy("xy"),
+                                  Coord(0, 0), Coord(7, 0))
+    assert detoured
+    assert path[0] == Coord(0, 0) and path[-1] == Coord(7, 0)
+    for a, b in zip(path, path[1:]):
+        assert not fs.link_is_dead(a, b)
+    # Healthy pairs keep the base policy route exactly.
+    base = get_policy("xy").route(MESH8, Coord(0, 0), Coord(0, 7))
+    path2, detoured2 = repair_route(MESH8, fs, get_policy("xy"),
+                                    Coord(0, 0), Coord(0, 7))
+    assert not detoured2 and path2 == base
+
+
+def test_detour_routes_respect_oddeven_turn_rules():
+    from repro.core.noc.faults.repair import _oddeven_legal
+
+    fs = FaultSet(dead_links=((Coord(3, 3), Coord(4, 3)),
+                              (Coord(3, 4), Coord(4, 4))))
+    path = detour_route(MESH8, fs, Coord(0, 3), Coord(7, 3))
+    dirs = [(b.x - a.x, b.y - a.y) for a, b in zip(path, path[1:])]
+    for i in range(1, len(dirs)):
+        assert _oddeven_legal(path[i], dirs[i - 1], dirs[i]), (path, i)
+
+
+def test_disconnection_raises_named_diagnostics():
+    # Wall off (0, 0) entirely.
+    fs = FaultSet(dead_links=((Coord(0, 0), Coord(1, 0)),
+                              (Coord(0, 0), Coord(0, 1))),)
+    with pytest.raises(FaultDisconnectedError):
+        detour_route(MESH8, fs, Coord(0, 0), Coord(7, 7))
+    # Dead endpoint names the tile.
+    fs2 = FaultSet(dead_routers=(Coord(7, 7),))
+    with pytest.raises(FaultDisconnectedError, match=r"\(7, ?7\)"):
+        repair_route(MESH8, fs2, get_policy("xy"), Coord(0, 0), Coord(7, 7))
+
+
+@pytest.mark.parametrize("name", ["xy", "yx", "o1turn", "oddeven"])
+@pytest.mark.parametrize("dims", [(4, 4), (6, 4), (5, 5)])
+def test_fast_min_vcs_agrees_with_exact_enumeration(name, dims):
+    mesh = Mesh2D(*dims)
+    assert fast_min_vcs(name, mesh) == min_vcs_for_deadlock_freedom(
+        get_policy(name), mesh)
+
+
+def test_escape_vc_placement():
+    assert escape_vc("xy", MESH8, 2) == 1
+    assert escape_vc("xy", MESH8, 1) is None  # no spare VC above the floor
+    assert escape_vc("o1turn", MESH8, 3) == 2
+    assert escape_vc("o1turn", MESH8, 2) is None
+
+
+def test_repaired_route_sets_pass_exact_cdg_check():
+    fs = FaultSet.sample(MESH8, dead_links=3, dead_routers=1, seed=5)
+    live = fs.live_tiles(MESH8)
+    pairs = [(live[i], live[-1 - i]) for i in range(0, len(live) // 2, 3)]
+    deps_by_vc = verify_repair(MESH8, fs, get_policy("xy"), pairs, num_vcs=2)
+    assert deps_by_vc  # at least one VC carries routes
+
+
+def test_verify_route_deps_raises_on_cyclic_vc():
+    # A hand-built 4-cycle of channel dependencies on one VC.
+    a, b, c, d = Coord(1, 1), Coord(2, 1), Coord(2, 2), Coord(1, 2)
+    cyc = {((a, b), (b, c)), ((b, c), (c, d)),
+           ((c, d), (d, a)), ((d, a), (a, b))}
+    with pytest.raises(RepairDeadlockError, match="num_vcs"):
+        verify_route_deps({0: cyc}, "xy", Mesh2D(4, 4), 1)
+
+
+# ---------------------------------------------------------------------------
+# Tree re-grafting
+# ---------------------------------------------------------------------------
+
+
+def test_fork_tree_regraft_valid_and_drops_dead_destinations():
+    src = Coord(0, 0)
+    maddr = multi_address_for([Coord(x, y) for x in (2, 3) for y in (2, 3)])
+    fs = FaultSet(dead_routers=(Coord(2, 2),),
+                  dead_links=((Coord(3, 0), Coord(3, 1)),))
+    fork, info = fork_tree_degraded(MESH8, src, maddr, policy="xy", faults=fs)
+    assert info.changed
+    assert Coord(2, 2) in [Coord(*d) for d in info.dropped] or info.dropped
+    dests = maddr.destinations(MESH8)
+    check_fork_tree(MESH8, fork, src, dests, faults=fs)
+    # Healthy mesh defers to the base fork tree (no re-graft).
+    fork0, info0 = fork_tree_degraded(MESH8, src, maddr, policy="xy",
+                                      faults=FaultSet())
+    assert not info0.changed
+
+
+def test_join_tree_regraft_valid_and_drops_dead_sources():
+    dst = Coord(0, 0)
+    sources = [Coord(x, y) for x in (4, 5) for y in (4, 5)]
+    fs = FaultSet(dead_routers=(Coord(4, 4),),
+                  dead_links=((Coord(2, 0), Coord(3, 0)),))
+    join, info = join_tree_degraded(MESH8, sources, dst, policy="xy",
+                                    faults=fs)
+    assert info.changed
+    check_join_tree(MESH8, join, dst, sources, faults=fs)
+    with pytest.raises(FaultDisconnectedError):
+        join_tree_degraded(MESH8, sources, Coord(4, 4), policy="xy",
+                           faults=fs)
+
+
+# ---------------------------------------------------------------------------
+# Engines under faults
+# ---------------------------------------------------------------------------
+
+
+def _faulted_workload(sim: NoCSim):
+    sim.add_unicast(Coord(0, 0), Coord(7, 7), 256)
+    sim.add_unicast(Coord(7, 0), Coord(0, 7), 256)
+    sim.add_unicast(Coord(0, 3), Coord(7, 3), 192)
+    sim.add_multicast(Coord(1, 1),
+                      multi_address_for([Coord(x, y) for x in (4, 5)
+                                         for y in (4, 5)]), 128)
+    sim.add_reduction([Coord(x, 6) for x in range(4)], Coord(6, 6), 128)
+
+
+def _fingerprint(engine: str, faults):
+    p = NoCParams(routing="xy", num_vcs=2, faults=faults)
+    sim = NoCSim(MESH8, p)
+    _faulted_workload(sim)
+    prof = sim.run(engine=engine, profile=True)
+    return (prof.makespan,
+            tuple(s.done_cycle for s in sim.streams),
+            prof.retries_paid, prof.detoured_routes, prof.regrafted_trees)
+
+
+def test_engines_bit_identical_under_faults():
+    fs = FaultSet.sample(MESH8, dead_links=2, dead_routers=1,
+                         flaky_links=2, seed=11)
+    ref = _fingerprint("heap", fs)
+    for engine in ENGINES:
+        assert _fingerprint(engine, fs) == ref, engine
+    # The degraded run actually exercised the fault machinery.
+    assert ref[2] > 0 or ref[3] > 0 or ref[4] > 0
+
+
+def test_zero_fault_path_bit_identical_to_pristine():
+    ref = _fingerprint("heap", None)
+    assert _fingerprint("heap", FaultSet()) == ref
+    assert ref[2] == ref[3] == ref[4] == 0
+
+
+def test_flaky_link_pays_retries_and_inflates_makespan():
+    # Flaky link directly on the lone stream's XY route.
+    fs = FaultSet(flaky_links=(FlakyLink(Coord(3, 0), Coord(4, 0),
+                                         duty=0.5, retry_cycles=4.0),))
+    p0 = NoCParams(routing="xy")
+    sim0 = NoCSim(MESH8, p0)
+    sim0.add_unicast(Coord(0, 0), Coord(7, 0), 128)
+    mk0 = sim0.run()
+    sim1 = NoCSim(MESH8, NoCParams(routing="xy", faults=fs))
+    sim1.add_unicast(Coord(0, 0), Coord(7, 0), 128)
+    prof = sim1.run(profile=True)
+    assert prof.makespan > mk0
+    assert prof.retries_paid == p0.beats(128)
+    assert prof.detoured_routes == 0
+
+
+def test_detour_uses_escape_vc_when_available():
+    fs = FaultSet(dead_links=((Coord(3, 0), Coord(4, 0)),))
+    sim = NoCSim(MESH8, NoCParams(routing="xy", num_vcs=2, faults=fs))
+    s = sim.add_unicast(Coord(0, 0), Coord(7, 0), 64)
+    assert s.vc == 1  # escape VC = num_vcs - 1
+    sim.run()
+    # At 1 VC there is no escape channel; the exact CDG gate still passes
+    # for this single detour.
+    sim1 = NoCSim(MESH8, NoCParams(routing="xy", num_vcs=1, faults=fs))
+    s1 = sim1.add_unicast(Coord(0, 0), Coord(7, 0), 64)
+    assert s1.vc == 0
+    sim1.run()
+
+
+def test_stall_report_names_faults():
+    fs = FaultSet(flaky_links=(FlakyLink(Coord(0, 0), Coord(1, 0),
+                                         duty=0.5, retry_cycles=4.0),))
+    sim = NoCSim(MESH8, NoCParams(routing="xy", faults=fs))
+    sim.add_unicast(Coord(0, 0), Coord(7, 0), 4096)
+    with pytest.raises(RuntimeError) as ei:
+        sim.run(max_cycles=3)
+    msg = str(ei.value)
+    assert "under active faults" in msg
+    assert "faults active" in msg
+    assert "flaky link (0,0)->(1,0)" in msg
+    # Pristine runs say so instead.
+    sim0 = NoCSim(MESH8, NoCParams(routing="xy"))
+    sim0.add_unicast(Coord(0, 0), Coord(7, 0), 4096)
+    with pytest.raises(RuntimeError, match="no faults active"):
+        sim0.run(max_cycles=3)
+
+
+# ---------------------------------------------------------------------------
+# Trace / program stamp
+# ---------------------------------------------------------------------------
+
+
+def test_trace_and_program_stamp_faults_and_round_trip():
+    fs = FaultSet.sample(MESH8, dead_links=2, flaky_links=1, seed=7)
+    sim = NoCSim(MESH8, NoCParams(routing="xy", num_vcs=2, faults=fs))
+    rec = TraceRecorder.attach(sim)
+    _faulted_workload(sim)
+    mk = sim.run()
+
+    tr = Trace.from_json(rec.trace.to_json())
+    assert tr.faults == fs
+    # Replay reproduces the faulted makespan; stripping the stamp gives
+    # the pristine one.
+    assert replay(tr, NoCParams(routing="xy", num_vcs=2)).makespan == mk
+    prog = from_trace(tr)
+    assert prog.faults == fs
+    assert prog.to_trace().faults == fs
+    assert prog.comm_only().faults == fs
+    assert Program.from_json(prog.to_json()).faults == fs
+
+
+def test_fault_free_json_has_no_faults_key():
+    sim = NoCSim(MESH8, NoCParams(routing="xy", num_vcs=2))
+    rec = TraceRecorder.attach(sim)
+    sim.add_unicast(Coord(0, 0), Coord(7, 7), 128)
+    sim.run()
+    assert "faults" not in json.loads(rec.trace.to_json())
+    assert "faults" not in json.loads(from_trace(rec.trace).to_json())
+
+
+def test_run_program_warns_when_stamped_policy_needs_more_vcs():
+    b = ProgramBuilder(MESH8)
+    b.unicast((0, 0), (7, 7), 128)
+    prog = dataclasses.replace(b.build(), routing="o1turn", num_vcs=1)
+    with pytest.warns(RuntimeWarning, match="o1turn.*num_vcs=1"):
+        run_program(prog)
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        run_program(dataclasses.replace(prog, num_vcs=2))
+        run_program(dataclasses.replace(prog, routing="xy", num_vcs=1))
+
+
+# ---------------------------------------------------------------------------
+# Fabric-level re-meshing
+# ---------------------------------------------------------------------------
+
+
+def test_surviving_submesh_avoids_dead_elements():
+    fs = FaultSet(dead_routers=(Coord(7, 7),))
+    sub = surviving_submesh(MESH8, fs)
+    assert sub.num_tiles == 32
+    assert Coord(7, 7) not in sub.coords()
+    fs2 = FaultSet(dead_routers=tuple(Coord(x, 3) for x in range(8))
+                   + tuple(Coord(x, 5) for x in range(8)))
+    sub2 = surviving_submesh(MESH8, fs2)
+    assert sub2.num_tiles == 16 and sub2.h == 2
+    with pytest.raises(FaultDisconnectedError):
+        surviving_submesh(Mesh2D(2, 2),
+                          FaultSet(dead_routers=tuple(Mesh2D(2, 2).coords())))
+
+
+def test_degrade_program_drop_rules():
+    b = ProgramBuilder(MESH8)
+    u = b.unicast((0, 0), (5, 5), 64)
+    u2 = b.unicast((1, 1), (2, 2), 64)
+    m = b.multicast((0, 0), multi_address_for([Coord(5, 5), Coord(5, 4)]), 64)
+    r = b.reduction([(5, 5), (5, 4)], (0, 0), 64)
+    c = b.compute((5, 5), 100.0)
+    bar = b.barrier(participants=[(5, 5), (0, 0), (1, 1)], counter=(5, 5))
+    prog = b.build()
+    fs = FaultSet(dead_routers=(Coord(5, 5),))
+    out = degrade_program(prog, fs)
+    kinds = [op.kind for op in out.ops]
+    # unicast to the dead tile and its compute are dropped; multicast and
+    # reduction survive on their live destination/source; barrier re-homes.
+    assert kinds.count("unicast") == 1
+    assert kinds.count("compute") == 0
+    assert kinds.count("multicast") == 1
+    assert kinds.count("reduction") == 1
+    barrier = [op for op in out.ops if op.kind == "barrier"][0]
+    assert tuple(barrier.counter) != (5, 5)
+    assert (5, 5) not in [tuple(p) for p in barrier.participants]
+    assert out.faults == fs
+    # The degraded program actually runs under its stamped faults.
+    res = run_program(out, NoCParams(routing="xy", num_vcs=2))
+    assert res.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests (skipped when hypothesis is absent, as in CI-minimal
+# environments; CI installs hypothesis explicitly).
+# ---------------------------------------------------------------------------
+
+
+def test_property_random_single_faults_repair_cleanly():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    dims = st.sampled_from([(4, 4), (5, 4), (6, 6), (8, 4)])
+    policies = st.sampled_from(["xy", "yx", "oddeven", "o1turn"])
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), dims=dims, name=policies,
+           kind=st.sampled_from(["link", "router"]))
+    def check(seed, dims, name, kind):
+        mesh = Mesh2D(*dims)
+        fs = FaultSet.sample(
+            mesh,
+            dead_links=1 if kind == "link" else 0,
+            dead_routers=1 if kind == "router" else 0,
+            seed=seed)
+        if fs.empty:  # sampler may fail to place on tiny meshes
+            return
+        rng = random.Random(seed)
+        live = fs.live_tiles(mesh)
+        pairs = [(rng.choice(live), rng.choice(live)) for _ in range(8)]
+        pairs = [(s, d) for s, d in pairs if s != d]
+        policy = get_policy(name)
+        vcs = max(2, fast_min_vcs(name, mesh) + 1)  # escape VC available
+        # Every repaired route avoids faults; the set passes the exact
+        # per-VC channel-dependency check.
+        for s, d in pairs:
+            path, _ = repair_route(mesh, fs, policy, s, d)
+            for a, b in zip(path, path[1:]):
+                assert not fs.link_is_dead(a, b)
+        verify_repair(mesh, fs, policy, pairs, num_vcs=vcs)
+
+    check()
+
+
+def test_property_random_faults_regraft_valid_trees():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           dims=st.sampled_from([(4, 4), (8, 4), (8, 8)]),
+           name=st.sampled_from(["xy", "yx", "oddeven"]))
+    def check(seed, dims, name):
+        mesh = Mesh2D(*dims)
+        fs = FaultSet.sample(mesh, dead_links=1, dead_routers=1, seed=seed)
+        rng = random.Random(seed ^ 0x5F5F)
+        live = fs.live_tiles(mesh)
+        src = rng.choice(live)
+        rect = [c for c in mesh.coords()
+                if c.x % 2 == src.x % 2 and c.y % 2 == src.y % 2]
+        maddr = multi_address_for(rect)
+        if any(not fs.router_is_dead(d) for d in maddr.destinations(mesh)):
+            fork, _ = fork_tree_degraded(mesh, src, maddr, policy=name,
+                                         faults=fs)
+            check_fork_tree(mesh, fork, src, maddr.destinations(mesh),
+                            faults=fs)
+        dst = rng.choice(live)
+        sources = [c for c in rng.sample(list(mesh.coords()),
+                                         min(6, mesh.num_tiles))
+                   if c != dst]
+        if any(not fs.router_is_dead(s) for s in sources):
+            join, _ = join_tree_degraded(mesh, sources, dst, policy=name,
+                                         faults=fs)
+            check_join_tree(mesh, join, dst, sources, faults=fs)
+
+    check()
+
+
+def test_property_faulted_engines_agree():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def check(seed):
+        mesh = Mesh2D(8, 8)
+        fs = FaultSet.sample(mesh, dead_links=2, dead_routers=1,
+                             flaky_links=1, seed=seed)
+        rng = random.Random(seed)
+        live = fs.live_tiles(mesh)
+
+        def build(sim):
+            r = random.Random(seed)
+            for _ in range(6):
+                s, d = r.choice(live), r.choice(live)
+                if s != d:
+                    sim.add_unicast(s, d, r.choice([64, 128, 256]))
+
+        results = []
+        for engine in ("heap", "cycle", "shard:2x2:1"):
+            sim = NoCSim(mesh, NoCParams(routing="xy", num_vcs=2, faults=fs))
+            build(sim)
+            mk = sim.run(engine=engine)
+            results.append((mk, tuple(s.done_cycle for s in sim.streams)))
+        assert results[0] == results[1] == results[2]
+
+    check()
