@@ -213,14 +213,25 @@ def _storm128() -> dict:
 
 
 def _sweep128(workers: int) -> dict:
-    """128x128 uniform saturation curve (compile-once + process fan-out)."""
+    """128x128 uniform saturation curve (compile-once + process fan-out).
+
+    The long-running row journals each completed point next to the JSON
+    output, so an interrupted nightly run resumes instead of restarting —
+    the journal is deleted once the curve lands in BENCH_engine.json.
+    """
     rates = (0.005, 0.02, 0.05)
+    journal = str(JSON_PATH.parent / ".bench_sweep128.journal.jsonl")
     t0 = time.perf_counter()
     pts = saturation_sweep(
         Mesh2D(128, 128), "uniform", rates, nbytes=256, packets_per_node=1,
         seed=0, params=PAPER_MICRO, engine="heap", workers=workers,
+        journal=journal,
     )
     wall = time.perf_counter() - t0
+    try:
+        os.remove(journal)
+    except OSError:
+        pass
     return {
         "wall_s": round(wall, 2),
         "workers": workers,

@@ -22,6 +22,7 @@ MODULES = [
     ("Routing", "benchmarks.bench_routing"),
     ("Faults", "benchmarks.bench_faults"),
     ("Program", "benchmarks.bench_program"),
+    ("Resilience", "benchmarks.bench_resilience"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

@@ -144,6 +144,34 @@
                                     (deepest / first-intersection
                                     grafting) with out-tree/in-tree
                                     validity checkers
+``resilience`` — resilient execution layer (failures during a run, where
+                ``faults`` models failures known before it):
+                ``resilience.checkpoint`` deterministic snapshot/restore
+                                    of a paused run at an exact cycle
+                                    boundary — versioned, sha256-
+                                    fingerprinted JSON; ``restore()`` +
+                                    ``run(start_cycle=C)`` is
+                                    bit-identical to the uninterrupted
+                                    run on every engine
+                ``resilience.supervise`` process-supervision primitives
+                                    for the shard fork backend:
+                                    poll-with-deadline receives,
+                                    heartbeats, dead/wedged detection,
+                                    respawn budgets and terminate→kill
+                                    teardown escalation; the shard
+                                    engine respawns-and-replays a lost
+                                    worker from its epoch op log, or
+                                    degrades to in-process execution,
+                                    without changing results
+                ``resilience.timeline`` seedable ``FaultTimeline`` of
+                                    mid-run ``(cycle, FaultSet)``
+                                    events: run to the event cycle,
+                                    compose fault sets, re-lower the
+                                    affected survivors through the
+                                    ``faults`` detour/re-graft/escape-VC
+                                    machinery (CDG gate re-verified),
+                                    resume; an empty timeline is
+                                    bit-identical to a plain run
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper, plus
                 ``load_claims``: saturation-aware checks of a sweep

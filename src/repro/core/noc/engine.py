@@ -68,6 +68,35 @@ If no pending stream has a finite readiness threshold the network can
 never progress again; all engines raise immediately with a per-stream
 stall report (which streams are stuck, their final-edge frontier beats,
 and the blocking edges) instead of spinning to ``max_cycles``.
+
+Pause / resume contract (checkpoint substrate)
+----------------------------------------------
+
+Every engine accepts a half-open simulation window ``[start, stop_at)``
+(``NoCSim.run(stop_at=..., start_cycle=...)``).  A run paused at cycle
+``C`` and resumed with ``start_cycle=C`` is **bit-identical** to an
+uninterrupted run — same arrivals, done cycles and ``_rr`` — because:
+
+* One arbitration slot is consumed per cycle in the window, idle gaps
+  included: a paused engine leaves ``_rr = rr_base + (C - start)``, so
+  the rotation key at absolute cycle ``t`` is always
+  ``(rr_base_0 + t) % n_live`` regardless of where the run was split.
+* Readiness thresholds recomputed from arrivals on resume can predate
+  ``C`` (arbitration losers whose beat was ready before the pause);
+  engines clamp the initial schedule to ``max(threshold, start)`` —
+  those cycles were already simulated, the stream just kept losing.
+* Gate origins (``_t0``), completion counters and heap caches are all
+  derived from arrivals/done cycles, never from wall state, so
+  ``_heap_init`` / ``_Region.init_run`` rebuild them exactly.
+
+``resilience/checkpoint.py`` serializes exactly the state this contract
+depends on — per-stream arrival lists, done cycles, gate wiring, exact
+Fraction inject/rate schedules, provenance, and sim-level ``_rr`` /
+``_pkt_seq`` / fault counters / CDG dependencies — as a versioned,
+sha256-fingerprinted JSON document (format ``repro-noc-checkpoint``,
+see that module).  ``restore()`` rebuilds streams through the plain
+``_StreamState`` constructor, so a resumed run re-derives every cache
+from the serialized ground truth.
 """
 
 from __future__ import annotations
@@ -109,12 +138,40 @@ class EngineProfile:
     retries_paid: int = 0          # beat crossings that paid a flaky retry
     detoured_routes: int = 0       # unicasts re-routed around dead elements
     regrafted_trees: int = 0       # fork/join trees rebuilt around faults
+    # Resilience counters: shard worker supervision (recoveries during a
+    # fork-backend run) and mid-run fault arrival (timeline events applied
+    # between run segments, streams re-lowered or dropped by them).
+    worker_retries: int = 0        # shard: ops retried after a worker failure
+    worker_respawns: int = 0       # shard: workers respawned (log replay)
+    worker_degradations: int = 0   # shard: fork -> in-process degradations
+    fault_events: int = 0          # mid-run FaultTimeline events applied
+    relowered_streams: int = 0     # live streams re-lowered at a fault event
+    dropped_streams: int = 0       # live streams dropped (dead endpoint)
 
     def counters(self) -> dict:
         d = dataclasses.asdict(self)
         d.pop("engine")
         d.pop("makespan")
         return d
+
+    def absorb(self, seg: "EngineProfile") -> None:
+        """Fold one run segment's profile into this accumulator (used by
+        checkpointed / timeline runs, which split one logical run into
+        several ``run()`` calls).  Scheduler work adds up; makespan and
+        the sim-cumulative fault/resilience counters take the latest
+        segment's value (``NoCSim._fault_counts`` already accumulates
+        across calls)."""
+        for k in ("advances", "heap_pushes", "heap_pops",
+                  "lazy_invalidations", "epochs", "boundary_reconciliations",
+                  "worker_retries", "worker_respawns", "worker_degradations"):
+            setattr(self, k, getattr(self, k) + getattr(seg, k))
+        for k in ("makespan", "retries_paid", "detoured_routes",
+                  "regrafted_trees", "fault_events", "relowered_streams",
+                  "dropped_streams"):
+            setattr(self, k, getattr(seg, k))
+        self.engine = seg.engine
+        self.regions = max(self.regions, seg.regions)
+        self.workers = max(self.workers, seg.workers)
 
 
 def gate_dependents(streams: Sequence["_StreamState"]) -> dict[int, list["_StreamState"]]:
@@ -160,15 +217,20 @@ def stuck_error(sim: "NoCSim", kind: str, t: int, stuck: Sequence["_StreamState"
     )
 
 
-def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
+def run_event_driven(sim: "NoCSim", max_cycles: int,
+                     stop_at: Optional[int] = None, start: int = 0) -> int:
     """Advance ``sim`` until all streams complete; returns last done cycle.
 
     Produces exactly the same per-stream arrival times and completion
-    cycles as the legacy one-iteration-per-cycle loop.
+    cycles as the legacy one-iteration-per-cycle loop.  With ``stop_at``
+    the engine simulates cycles in ``[start, stop_at)`` only and returns
+    ``stop_at`` when streams remain — the pause/resume contract in the
+    module docstring.
     """
     dependents = gate_dependents(sim.streams)
-    t = 0
-    while t < max_cycles:
+    t = start
+    limit = max_cycles if stop_at is None else min(max_cycles, stop_at)
+    while t < limit:
         pending = [s for s in sim.streams if s.done_cycle is None]
         if not pending:
             break
@@ -211,11 +273,13 @@ def run_event_driven(sim: "NoCSim", max_cycles: int) -> int:
             nxt = min(nxt, hint)
         if nxt == math.inf:
             raise stuck_error(sim, "deadlock", t, pending)
-        nxt = max(int(nxt), t + 1)
+        nxt = min(max(int(nxt), t + 1), limit)  # never skip past the window
         sim._rr_skip(nxt - t - 1)  # idle cycles still consume arbitration slots
         t = nxt
     unfinished = [s for s in sim.streams if s.done_cycle is None]
     if unfinished:
+        if stop_at is not None and stop_at <= max_cycles:
+            return stop_at  # paused at the window boundary, not stuck
         raise stuck_error(sim, "deadlock/timeout", t, unfinished)
     if not sim.streams:
         return 0
@@ -251,10 +315,15 @@ class _Fenwick:
 
 
 def run_heap(sim: "NoCSim", max_cycles: int,
-             prof: Optional[EngineProfile] = None) -> int:
+             prof: Optional[EngineProfile] = None,
+             stop_at: Optional[int] = None, start: int = 0) -> int:
     """Heap-scheduled engine: bit-identical to the per-cycle loop, but a
     cycle only ever touches the streams whose exact next-ready threshold
-    has been reached (plus carried arbitration losers)."""
+    has been reached (plus carried arbitration losers).  ``[start,
+    stop_at)`` windows the simulated cycles (pause/resume contract, see
+    module docstring): the rotation key at absolute cycle ``t`` is
+    ``(rr_base + t - start) % n_live`` and a paused run leaves
+    ``_rr = rr_base + (stop_at - start)``."""
     streams = sim.streams
     n = len(streams)
     live = [s.done_cycle is None for s in streams]
@@ -299,15 +368,19 @@ def run_heap(sim: "NoCSim", max_cycles: int,
         ]
         c = s.next_ready()
         if c is not None:
+            if c < start:
+                c = start  # ready before the resume point: cycles < start
+                           # were already simulated (arbitration losses)
             sched[i] = c
             gheap.append((c, i))
     heapq.heapify(gheap)
 
     rr_base = sim._rr
-    t = -1          # last processed cycle
+    t = start - 1   # last processed cycle
     carry: list[int] = []  # streams still ready after losing arbitration at t
     n_adv = n_pop = n_stale = 0
     n_push = len(gheap)  # initial population counts as pushes
+    paused = False
     while n_live:
         if carry:
             t_next = t + 1
@@ -326,6 +399,9 @@ def run_heap(sim: "NoCSim", max_cycles: int,
                     sim, "deadlock", t + 1,
                     [s for i, s in enumerate(streams) if live[i]],
                 )
+        if stop_at is not None and t_next >= stop_at and stop_at <= max_cycles:
+            paused = True
+            break
         if t_next >= max_cycles:
             raise stuck_error(
                 sim, "deadlock/timeout", max_cycles,
@@ -343,9 +419,9 @@ def run_heap(sim: "NoCSim", max_cycles: int,
             else:
                 n_stale += 1
         # Rotated live-position order == the legacy pending-list rotation.
-        start = (rr_base + t) % n_live
+        rot = (rr_base + t - start) % n_live
         ordered = sorted(
-            ready, key=lambda i: (fen.prefix(i) - start) % n_live
+            ready, key=lambda i: (fen.prefix(i) - rot) % n_live
         )
         busy: set = set()
         finished: list[int] = []
@@ -390,11 +466,19 @@ def run_heap(sim: "NoCSim", max_cycles: int,
                     heapq.heappush(gheap, (c, d))
                     n_push += 1
     # One arbitration slot per cycle examined, exactly like the legacy
-    # loop (idle gaps included): cycles 0..t inclusive.
-    sim._rr = rr_base + t + 1
+    # loop (idle gaps included): cycles start..t inclusive — or the whole
+    # window [start, stop_at) on pause, trailing idle cycles included, so
+    # a resume continues the counter exactly where an uninterrupted run
+    # would stand at stop_at.
+    if paused:
+        sim._rr = rr_base + (stop_at - start)
+    else:
+        sim._rr = rr_base + (t - start) + 1
     if prof is not None:
         prof.advances += n_adv
         prof.heap_pushes += n_push
         prof.heap_pops += n_pop
         prof.lazy_invalidations += n_stale
+    if paused:
+        return stop_at
     return max(s.done_cycle for s in streams)

@@ -269,6 +269,38 @@ class FaultSet:
             seed=int(d.get("seed", 0)),
         )
 
+    # -- composition (mid-run fault arrival) --------------------------------
+
+    def union(self, other: "FaultSet") -> "FaultSet":
+        """Compose two fault patterns: the union of dead links, dead
+        routers and flaky links.  A link dead in either set wins over a
+        flaky entry for the same link (dead is strictly worse), and a
+        link flaky in both keeps ``self``'s parameters.  ``self.seed`` is
+        kept — the composed set stays deterministic for the run that owns
+        it.  Used by the fault timeline to fold a mid-run event into the
+        faults already active."""
+        dead_links = set(self.dead_links) | {
+            _pair(a, b) for a, b in other.dead_links
+        }
+        dead_routers = set(self.dead_routers) | {
+            Coord(*c) for c in other.dead_routers
+        }
+        flaky: dict = {}
+        for f in tuple(other.flaky_links) + tuple(self.flaky_links):
+            flaky[_pair(f.a, f.b)] = f  # self's entries overwrite other's
+        kept = tuple(
+            f for key, f in sorted(flaky.items(),
+                                   key=lambda kv: (tuple(kv[0][0]),
+                                                   tuple(kv[0][1])))
+            if key not in dead_links
+        )
+        return FaultSet(
+            dead_links=tuple(dead_links),
+            dead_routers=tuple(dead_routers),
+            flaky_links=kept,
+            seed=self.seed,
+        )
+
     # -- sampling ----------------------------------------------------------
 
     @staticmethod

@@ -142,6 +142,14 @@ class _StreamState:
         self._ready_set: set[int] = set()
         self._final_need: int = 0
         self._gate_t0: Optional[int] = None
+        # Provenance: the op this stream was lowered from, as set by the
+        # spec builders — ("unicast", src, dst, nbytes) etc.  Mid-run
+        # fault arrival (noc.resilience.timeline) re-lowers affected live
+        # streams from it; checkpoints serialize it so restored runs can
+        # still take later fault events.  None for hand-built streams
+        # (such streams cannot be re-lowered and fail loudly if a fault
+        # event hits them).
+        self.origin: Optional[tuple] = None
 
     def edges(self) -> list[Edge]:
         out = set(self.prereqs)
@@ -582,6 +590,10 @@ class StreamSpec:
     # must travel on the spec to land in the sim that actually runs.
     fault_meta: Optional[dict] = None          # EngineProfile counter deltas
     fault_deps: Optional[tuple] = None         # (vc, link-dependency tuple)
+    # Provenance of the op this spec lowers — ("unicast", src, dst,
+    # nbytes) and friends; carried onto the instantiated stream so
+    # mid-run fault arrival can re-lower it (see _StreamState.origin).
+    origin: Optional[tuple] = None
     _topology: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     def instantiate(self, sim: "NoCSim", start: float) -> "_StreamState":
@@ -600,6 +612,7 @@ class StreamSpec:
             finals=self.finals,
             vc=self.vc,
         )
+        st.origin = self.origin
         if self._topology is None:
             self._topology = st._topology()
         else:
@@ -845,6 +858,7 @@ class NoCSim:
             vc=vc,
             fault_meta=meta,
             fault_deps=deps,
+            origin=("unicast", src, dst, nbytes),
         )
 
     def add_multicast(self, src: Coord, maddr: MultiAddress, nbytes: int, start: float = 0.0):
@@ -874,6 +888,7 @@ class NoCSim:
             finals=finals,
             vc=self.p.vc_of("multicast"),
             fault_meta=meta,
+            origin=("multicast", src, maddr, nbytes),
         )
 
     def add_reduction(
@@ -924,6 +939,8 @@ class NoCSim:
             finals=finals,
             vc=self.p.vc_of(traffic_class),
             fault_meta=meta,
+            origin=("reduction", tuple(sources), dst, nbytes, inject_alpha,
+                    traffic_class),
         )
 
     def add_timed(self, at: Coord, cycles: float, start: float = 0.0):
@@ -951,12 +968,14 @@ class NoCSim:
             inject_offset=cycles,
             inject_rate=0,
             finals=[e],
+            origin=("timed", at, cycles),
         )
 
     # -- engine -------------------------------------------------------------
 
     def run(self, max_cycles: int = 2_000_000, engine: str = "heap",
-            profile: bool = False):
+            profile: bool = False, stop_at: Optional[int] = None,
+            start_cycle: int = 0):
         """Advance until all streams complete; returns the last done cycle
         (or an :class:`~repro.core.noc.engine.EngineProfile` carrying the
         makespan plus engine counters when ``profile=True``).
@@ -973,8 +992,22 @@ class NoCSim:
         ``engine='cycle'`` is the legacy one-iteration-per-cycle loop.
         All engines are bit-identical (same per-stream arrivals,
         completion cycles and arbitration counter).
+
+        ``stop_at`` pauses the run at an exact cycle boundary: only
+        cycles in ``[start_cycle, stop_at)`` are simulated and the call
+        returns ``stop_at`` when streams remain in flight.  A paused sim
+        resumed with ``run(start_cycle=stop_at, ...)`` — directly, or
+        after a checkpoint round trip through
+        ``noc.resilience.checkpoint`` — is bit-identical to an
+        uninterrupted run on every engine (same arrivals, done cycles and
+        arbitration counter; see the pause/resume contract in
+        ``noc.engine``).
         """
         from repro.core.noc.engine import EngineProfile
+
+        if stop_at is not None and stop_at < start_cycle:
+            raise ValueError(
+                f"stop_at={stop_at} precedes start_cycle={start_cycle}")
 
         # Exact deadlock gate for degraded runs: the unicast routes this
         # workload actually uses (base + detours) must have an acyclic
@@ -988,16 +1021,20 @@ class NoCSim:
 
         prof = EngineProfile(engine=engine) if profile else None
         if engine == "heap":
-            makespan = run_heap(self, max_cycles, prof)
+            makespan = run_heap(self, max_cycles, prof,
+                                stop_at=stop_at, start=start_cycle)
         elif engine == "event":
-            makespan = run_event_driven(self, max_cycles)
+            makespan = run_event_driven(self, max_cycles,
+                                        stop_at=stop_at, start=start_cycle)
         elif isinstance(engine, str) and engine.startswith("shard"):
             from repro.core.noc.shard import parse_shard_engine, run_shard
 
             cfg = parse_shard_engine(engine)
-            makespan = run_shard(self, max_cycles, cfg, prof)
+            makespan = run_shard(self, max_cycles, cfg, prof,
+                                 stop_at=stop_at, start=start_cycle)
         elif engine == "cycle":
-            makespan = self._run_cycle(max_cycles)
+            makespan = self._run_cycle(max_cycles, stop_at=stop_at,
+                                       start=start_cycle)
         else:
             raise ValueError(f"unknown engine {engine!r}")
         if prof is not None:
@@ -1006,17 +1043,22 @@ class NoCSim:
             prof.retries_paid = fc["retries_paid"]
             prof.detoured_routes = fc["detoured_routes"]
             prof.regrafted_trees = fc["regrafted_trees"]
+            prof.fault_events = fc.get("fault_events", 0)
+            prof.relowered_streams = fc.get("relowered_streams", 0)
+            prof.dropped_streams = fc.get("dropped_streams", 0)
             self.last_profile = prof
             return prof
         return makespan
 
-    def _run_cycle(self, max_cycles: int) -> int:
+    def _run_cycle(self, max_cycles: int, stop_at: Optional[int] = None,
+                   start: int = 0) -> int:
         """The legacy one-iteration-per-cycle reference loop."""
         from repro.core.noc.engine import gate_dependents, stuck_error
 
         dependents = gate_dependents(self.streams)
-        t = 0
-        while t < max_cycles:
+        t = start
+        limit = max_cycles if stop_at is None else min(max_cycles, stop_at)
+        while t < limit:
             pending = [s for s in self.streams if s.done_cycle is None]
             if not pending:
                 break
@@ -1042,6 +1084,8 @@ class NoCSim:
             t += 1
         unfinished = [s for s in self.streams if s.done_cycle is None]
         if unfinished:
+            if stop_at is not None and stop_at <= max_cycles:
+                return stop_at  # paused at the window boundary, not stuck
             raise stuck_error(self, "deadlock/timeout", t, unfinished)
         if not self.streams:
             return 0

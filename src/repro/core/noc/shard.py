@@ -65,6 +65,27 @@ owned arrival suffixes once at the end (or on error, so stall reports
 match the serial engines).  If worker processes cannot be spawned the
 engine warns (naming the exception) and falls back to in-process
 execution — results are identical either way.
+
+Supervision and recovery
+------------------------
+
+The fork backend is *supervised*: every epoch op is a poll-with-deadline
+receive (``resilience.supervise``) against the worker's process liveness
+and heartbeat.  A worker that dies (SIGKILL, OOM) or wedges (silent past
+the op deadline) is detected and named — worker index, pid, epoch — then
+recovered by **respawn + deterministic replay**: the parent's region and
+worker-state objects are never mutated while fork workers run, so a
+fresh fork child inherits the run's *initial* state, and replaying the
+coordinator's op log (every successful ``sim``/``rec`` op) reconstructs
+the dead worker's exact region state before the failed op is retried.
+The respawn budget is ``SuperviseConfig.max_respawns``; once spent the
+run *degrades*: the in-process backend is built over the parent's
+pristine regions, the same op log is replayed on it, and the epoch loop
+continues from the failed epoch — coordinator progress (completions,
+gate releases, reconciliation state) is never rewound.  Retries,
+respawns and degradations are reported in ``EngineProfile``.  Teardown
+escalates ``join -> terminate -> kill`` so a wedged worker cannot
+outlive its parent.
 """
 
 from __future__ import annotations
@@ -74,10 +95,21 @@ import dataclasses
 import heapq
 import math
 import os
+import signal
+import time
 import warnings
 from typing import TYPE_CHECKING, Optional
 
 from repro.core.noc.engine import stuck_error
+from repro.core.noc.resilience.supervise import (
+    Heartbeat,
+    SuperviseConfig,
+    WorkerDead,
+    WorkerFailure,
+    WorkerWedged,
+    reap,
+    supervised_recv,
+)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.noc.engine import EngineProfile
@@ -96,10 +128,12 @@ class ShardConfig:
     """Region grid + worker processes.  ``grid=None`` picks a square-ish
     grid of about ``workers`` regions clamped to the mesh extents;
     ``workers=None`` defaults to ``min(4, cpu_count)``.  Neither choice
-    affects results — only wall-clock."""
+    affects results — only wall-clock.  ``supervise`` overrides the fork
+    backend's supervision deadlines/budgets (None = defaults)."""
 
     grid: Optional[tuple[int, int]] = None
     workers: Optional[int] = None
+    supervise: Optional[SuperviseConfig] = None
 
     def resolve(self, mesh) -> tuple[tuple[int, int], int]:
         workers = self.workers
@@ -638,25 +672,30 @@ class _Region:
 
     # -- run start ---------------------------------------------------------
 
-    def init_run(self) -> list:
+    def init_run(self, start: int = 0) -> list:
         """Heap-init every fragment; returns pre-drained local finals
         [(sidx, local done)] (only possible when a partially-run stream is
-        resumed)."""
+        resumed).  ``start`` is the run's first simulated cycle: readiness
+        thresholds recomputed from arrivals can predate it (arbitration
+        losers at a pause boundary) and are clamped to it, exactly like
+        ``run_heap``'s initial schedule."""
         pre = []
         self.sched = [None] * len(self.frags)
         self.gheap = []
         self.carry = []
-        self.t = -1
+        self.t = start - 1
         for fidx, f in enumerate(self.frags):
             f.heap_init()
             if f.local_done is not None and any(f.fcount):
                 pre.append((f.sidx, f.local_done))
             c = f.next_ready()
             if c is not None:
+                if c < start:
+                    c = start
                 self.sched[fidx] = c
                 self.gheap.append((c, fidx))
             if f.gate_t0 is not None:
-                self.refresh_frag(fidx, 0, {})
+                self.refresh_frag(fidx, start, {})
         heapq.heapify(self.gheap)
         return pre
 
@@ -946,7 +985,7 @@ class _CoordState:
         self.initial_finals: list = []
 
 
-def _build(sim: "NoCSim", grid: tuple[int, int]):
+def _build(sim: "NoCSim", grid: tuple[int, int], start: int = 0):
     mesh = sim.mesh
     gx, gy = grid
     cols, rows = mesh.cols, mesh.rows
@@ -1049,14 +1088,51 @@ def _build(sim: "NoCSim", grid: tuple[int, int]):
                     creg.cons[bid] = (tuple(arrset.values()), tuple(rsl))
     regions = [r for r in all_regions if r.frags]
     for region in regions:
-        state.initial_finals.extend(region.init_run())
-    ws = _WorkerState(len(streams), state.live, sim._rr)
+        state.initial_finals.extend(region.init_run(start))
+    ws = _WorkerState(len(streams), state.live, sim._rr - start)
     return state, regions, ws
 
 
 # ---------------------------------------------------------------------------
 # Execution backends
 # ---------------------------------------------------------------------------
+
+# Test-only chaos hook: schedule exactly one induced worker failure in the
+# next fork-backend run.  Injected from the *parent* side (SIGKILL) or as a
+# wedge op the child executes (sleep, optionally ignoring SIGTERM), so tests
+# can exercise dead- and wedged-worker recovery without reaching into
+# subprocess memory.  Fires once, then disarms itself.
+_chaos: dict = {}
+
+
+def set_chaos(kind: Optional[str], worker: int = 0, at_op: int = 0,
+              seconds: float = 3600.0, ignore_sigterm: bool = False) -> None:
+    """Arm (or with ``kind=None`` disarm) one induced fork-worker failure:
+    ``kind='kill'`` SIGKILLs worker ``worker`` just before its op number
+    ``at_op`` is sent; ``kind='wedge'`` makes it sleep ``seconds`` at that
+    point (optionally ignoring SIGTERM, to exercise the kill escalation)."""
+    _chaos.clear()
+    if kind is not None:
+        _chaos.update(kind=kind, worker=worker, at_op=at_op,
+                      seconds=seconds, ignore_sigterm=ignore_sigterm,
+                      fired=False)
+
+
+def _deltas_from_fires(fires_by_bid: dict, state: "_CoordState",
+                       worker_of) -> dict:
+    """Boundary-fire deltas per consumer region, derived from the raw
+    per-bid fire cycles.  ``append`` is backend-specific — True only when
+    the consumer region runs in a different process than the producer
+    (its arrival-list copies need the cycles appended; same-process
+    consumers share the lists physically) — which is why the epoch log
+    stores ``fires_by_bid`` and each backend derives its own deltas."""
+    deltas_by_region: dict = {}
+    for bid, cycles in fires_by_bid.items():
+        pw = worker_of(state.bid_producer_region[bid])
+        for cr in state.bid_consumers[bid]:
+            append = worker_of(cr) != pw
+            deltas_by_region.setdefault(cr, []).append((bid, cycles, append))
+    return deltas_by_region
 
 
 def _simulate_regions(regions, T: int, max_cycles: int, ws: _WorkerState) -> dict:
@@ -1095,12 +1171,15 @@ class _InProcBackend:
     deltas only reschedule consumers (append=False everywhere)."""
 
     workers_used = 0
+    epoch = 0
 
-    def __init__(self, regions, ws, max_cycles):
+    def __init__(self, regions, ws, max_cycles, state):
         self.regions = regions
         self.ws = ws
         self.max_cycles = max_cycles
+        self.state = state
         self.floors: dict = {}
+        self.recovery: dict = {}
 
     def worker_of(self, rid: int) -> int:
         return 0
@@ -1108,8 +1187,10 @@ class _InProcBackend:
     def simulate(self, T: int) -> dict:
         return _simulate_regions(self.regions, T, self.max_cycles, self.ws)
 
-    def reconcile(self, deltas_by_region, deaths, releases, wanted,
+    def reconcile(self, fires_by_bid, deaths, releases, wanted,
                   floor_updates, t0: int):
+        deltas_by_region = _deltas_from_fires(
+            fires_by_bid, self.state, self.worker_of)
         return _reconcile_regions(
             self.regions, self.ws, self.floors, deltas_by_region, deaths,
             releases, wanted, floor_updates, t0,
@@ -1123,8 +1204,10 @@ class _InProcBackend:
         pass
 
 
-def _worker_main(conn, regions, ws, max_cycles):  # pragma: no cover - subprocess
-    """Fork-child loop: inherited regions + worker state, pipe-driven."""
+def _worker_main(conn, regions, ws, max_cycles, hb=None):  # pragma: no cover - subprocess
+    """Fork-child loop: inherited regions + worker state, pipe-driven.
+    ``hb`` is the shared heartbeat stamped at each op start so the parent
+    can distinguish a slow epoch from a wedged process."""
     import gc
 
     # The child inherits the parent's whole heap; a GC pass would touch
@@ -1136,6 +1219,8 @@ def _worker_main(conn, regions, ws, max_cycles):  # pragma: no cover - subproces
     try:
         while True:
             msg = conn.recv()
+            if hb is not None:
+                hb.beat()
             op = msg[0]
             if op == "sim":
                 conn.send(_simulate_regions(regions, msg[1], max_cycles, ws))
@@ -1150,6 +1235,11 @@ def _worker_main(conn, regions, ws, max_cycles):  # pragma: no cover - subproces
                     (r.rid, r.arrival_payload(), r.counters()) for r in regions
                 ])
                 break
+            elif op == "wedge":  # test-induced hang (see set_chaos)
+                _, seconds, ignore_sigterm = msg
+                if ignore_sigterm:
+                    signal.signal(signal.SIGTERM, signal.SIG_IGN)
+                time.sleep(seconds)
             else:
                 raise ValueError(f"unknown worker op {op!r}")
     except (EOFError, KeyboardInterrupt):
@@ -1160,34 +1250,49 @@ def _worker_main(conn, regions, ws, max_cycles):  # pragma: no cover - subproces
 
 class _ForkBackend:
     """Persistent fork workers, one pipe each; regions are inherited
-    copy-on-write at fork time so setup ships no data."""
+    copy-on-write at fork time so setup ships no data.
 
-    def __init__(self, regions, ws, max_cycles, workers):
+    Supervised: every reply is a poll-with-deadline ``supervised_recv``
+    against the worker's liveness and heartbeat.  Failed workers are
+    respawned (fresh fork of the parent's *never-mutated* initial state)
+    and rebuilt by replaying the op log — every successful ``sim``/``rec``
+    op, each of which is deterministic — then the failed op is retried
+    once.  Budget exhaustion or a failed replay raises
+    :class:`WorkerFailure`, which the coordinator turns into in-process
+    degradation.  ``recovery`` counts retries/respawns for the profile.
+    """
+
+    def __init__(self, regions, ws, max_cycles, workers, state,
+                 supervise: Optional[SuperviseConfig] = None):
         import multiprocessing as mp
 
-        ctx = mp.get_context("fork")
+        self._ctx = mp.get_context("fork")
         nw = min(workers, len(regions))
         self.regions = regions
+        self.ws = ws
+        self.max_cycles = max_cycles
+        self.state = state
+        self.cfg = supervise or SuperviseConfig()
         self._worker_of = {
             r.rid: i % nw for i, r in enumerate(regions)
         }
-        self.conns = []
-        self.procs = []
+        self.conns: list = [None] * nw
+        self.procs: list = [None] * nw
+        self.hbs: list = [None] * nw
         self.workers_used = nw
         self._collected = None
+        # Op log for respawn replay + degradation handoff.  "fin" is never
+        # logged (it is idempotent from parent-side absorbed state and must
+        # not be replayed into a fresh worker mid-run).
+        self.log: list = []
+        self._op_count = [0] * nw   # ops sent per worker (chaos addressing)
+        self._deltas_key = None     # identity cache for per-worker payloads
+        self._deltas_cache = None
+        self.recovery = {"worker_retries": 0, "worker_respawns": 0}
+        self.epoch = 0              # stamped by the coordinator per epoch
         try:
             for w in range(nw):
-                regs = [r for i, r in enumerate(regions) if i % nw == w]
-                parent_conn, child_conn = ctx.Pipe()
-                p = ctx.Process(
-                    target=_worker_main,
-                    args=(child_conn, regs, ws, max_cycles),
-                    daemon=True,
-                )
-                p.start()
-                child_conn.close()
-                self.conns.append(parent_conn)
-                self.procs.append(p)
+                self._spawn(w)
         except BaseException:
             self.close()
             raise
@@ -1195,10 +1300,132 @@ class _ForkBackend:
     def worker_of(self, rid: int) -> int:
         return self._worker_of[rid]
 
-    def _broadcast(self, msg) -> list:
-        for conn in self.conns:
-            conn.send(msg)
-        return [conn.recv() for conn in self.conns]
+    # -- process lifecycle -------------------------------------------------
+
+    def _spawn(self, w: int) -> None:
+        regs = [
+            r for i, r in enumerate(self.regions)
+            if i % self.workers_used == w
+        ]
+        hb = Heartbeat(self._ctx)
+        parent_conn, child_conn = self._ctx.Pipe()
+        p = self._ctx.Process(
+            target=_worker_main,
+            args=(child_conn, regs, self.ws, self.max_cycles, hb),
+            daemon=True,
+        )
+        p.start()
+        child_conn.close()
+        self.conns[w] = parent_conn
+        self.procs[w] = p
+        self.hbs[w] = hb
+
+    def _recover(self, w: int, exc: BaseException) -> None:
+        """Respawn worker ``w`` and rebuild its state by replaying the op
+        log; raises :class:`WorkerFailure` when the respawn budget is spent
+        or the replay itself fails."""
+        if self.recovery["worker_respawns"] >= self.cfg.max_respawns:
+            raise WorkerFailure(
+                w, self.epoch,
+                f"respawn budget ({self.cfg.max_respawns}) exhausted; "
+                f"last failure: {exc!r}",
+            ) from exc
+        p = self.procs[w]
+        warnings.warn(
+            f"shard engine: worker {w} (pid {p.pid}) failed during epoch "
+            f"{self.epoch} ({exc!r}); respawning and replaying "
+            f"{len(self.log)} logged op(s)",
+            RuntimeWarning,
+            stacklevel=4,
+        )
+        try:
+            self.conns[w].close()
+        except OSError:
+            pass
+        if p.is_alive():
+            p.kill()
+        p.join(timeout=self.cfg.term_timeout_s)
+        self.recovery["worker_respawns"] += 1
+        self._spawn(w)
+        self._op_count[w] = 0
+        for entry in self.log:
+            try:
+                self._send(w, entry)
+                supervised_recv(
+                    self.conns[w], self.procs[w], self.cfg, self.hbs[w])
+            except (WorkerDead, WorkerWedged, EOFError, OSError) as exc2:
+                raise WorkerFailure(
+                    w, self.epoch,
+                    f"op-log replay after respawn failed: {exc2!r}",
+                ) from exc2
+
+    def _retry(self, w: int, entry, exc: BaseException):
+        self._recover(w, exc)
+        self.recovery["worker_retries"] += 1
+        try:
+            self._send(w, entry)
+            return supervised_recv(
+                self.conns[w], self.procs[w], self.cfg, self.hbs[w])
+        except (WorkerDead, WorkerWedged, EOFError, OSError) as exc2:
+            raise WorkerFailure(
+                w, self.epoch,
+                f"retry after respawn also failed: {exc2!r}",
+            ) from exc2
+
+    # -- op plumbing -------------------------------------------------------
+
+    def _payload(self, w: int, entry):
+        """Per-worker wire message for a logged op: ``rec`` entries carry
+        raw ``fires_by_bid`` and are specialized into this worker's local
+        deltas here (append flags are process-layout-specific)."""
+        if entry[0] != "rec":
+            return entry
+        if self._deltas_key is not entry:
+            self._deltas_cache = _deltas_from_fires(
+                entry[1], self.state, self.worker_of)
+            self._deltas_key = entry
+        local = {
+            rid: d for rid, d in self._deltas_cache.items()
+            if self._worker_of[rid] == w
+        }
+        return ("rec", local) + entry[2:]
+
+    def _send(self, w: int, entry) -> None:
+        ch = _chaos
+        if (ch and not ch["fired"] and ch["worker"] == w
+                and self._op_count[w] >= ch["at_op"]):
+            ch["fired"] = True
+            if ch["kind"] == "kill":
+                os.kill(self.procs[w].pid, signal.SIGKILL)
+                self.procs[w].join(timeout=self.cfg.term_timeout_s)
+            elif ch["kind"] == "wedge":
+                self.conns[w].send(
+                    ("wedge", ch["seconds"], ch["ignore_sigterm"]))
+        self.conns[w].send(self._payload(w, entry))
+        self._op_count[w] += 1
+
+    def _broadcast(self, entry) -> list:
+        send_failed: dict = {}
+        for w in range(self.workers_used):
+            try:
+                self._send(w, entry)
+            except (OSError, ValueError) as exc:
+                send_failed[w] = exc
+        replies: list = [None] * self.workers_used
+        for w in range(self.workers_used):
+            if w in send_failed:
+                replies[w] = self._retry(w, entry, send_failed[w])
+                continue
+            try:
+                replies[w] = supervised_recv(
+                    self.conns[w], self.procs[w], self.cfg, self.hbs[w])
+            except (WorkerDead, WorkerWedged) as exc:
+                replies[w] = self._retry(w, entry, exc)
+        if entry[0] != "fin":
+            self.log.append(entry)
+        return replies
+
+    # -- backend interface -------------------------------------------------
 
     def simulate(self, T: int) -> dict:
         out: dict = {}
@@ -1206,20 +1433,13 @@ class _ForkBackend:
             out.update(reply)
         return out
 
-    def reconcile(self, deltas_by_region, deaths, releases, wanted,
+    def reconcile(self, fires_by_bid, deaths, releases, wanted,
                   floor_updates, t0: int):
-        for w, conn in enumerate(self.conns):
-            local = {
-                rid: d for rid, d in deltas_by_region.items()
-                if self._worker_of[rid] == w
-            }
-            conn.send(
-                ("rec", local, deaths, releases, wanted, floor_updates, t0)
-            )
+        entry = ("rec", fires_by_bid, deaths, releases, wanted,
+                 floor_updates, t0)
         minb: dict = {}
         lbs: dict = {}
-        for conn in self.conns:
-            mb, lb = conn.recv()
+        for mb, lb in self._broadcast(entry):
             minb.update(mb)
             for sidx, v in lb.items():
                 if sidx not in lbs or v > lbs[sidx]:
@@ -1241,16 +1461,21 @@ class _ForkBackend:
         self._collected = counters
         return counters
 
-    def close(self) -> None:
+    def close(self) -> dict:
         for conn in self.conns:
+            if conn is None:
+                continue
             try:
                 conn.close()
             except OSError:
                 pass
-        for p in self.procs:
-            p.join(timeout=5)
-            if p.is_alive():  # pragma: no cover - defensive
-                p.terminate()
+        self.conns = [None] * self.workers_used
+        stats = reap(
+            [p for p in self.procs if p is not None],
+            self.cfg.join_timeout_s, self.cfg.term_timeout_s,
+        )
+        self.procs = [None] * self.workers_used
+        return stats
 
 
 # ---------------------------------------------------------------------------
@@ -1332,25 +1557,37 @@ def _process_finals(state: _CoordState, finals):
     return deaths, releases
 
 
-def _finalize(sim: "NoCSim", state: _CoordState, rr_base: int) -> int:
+def _finalize(sim: "NoCSim", state: _CoordState, rr_base: int,
+              start: int = 0, paused_at: Optional[int] = None) -> int:
     """Install completions on the real streams and close the run exactly
-    like run_heap: one arbitration slot per cycle up to the last
-    completion of this run."""
+    like run_heap: one arbitration slot per cycle examined in this run's
+    window.  A paused run consumed exactly ``paused_at - start`` slots
+    and returns ``paused_at``; a completed run consumed
+    ``last_completion - start + 1``."""
     for sidx, done in state.done.items():
         st = state.streams[sidx]
         st.done_cycle = done
         st.ready_hint = None
+    if paused_at is not None:
+        sim._rr = rr_base + (paused_at - start)
+        return paused_at
     if state.last_completion >= 0:
-        sim._rr = rr_base + state.last_completion + 1
+        sim._rr = rr_base + (state.last_completion - start) + 1
     return max(s.done_cycle for s in sim.streams)
 
 
 def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
-              prof: "EngineProfile | None" = None) -> int:
-    """Run ``sim`` to completion under the region-sharded engine.
+              prof: "EngineProfile | None" = None,
+              stop_at: Optional[int] = None, start: int = 0) -> int:
+    """Run ``sim`` under the region-sharded engine.
 
     Bit-identical to ``engine='heap'``: same arrivals, done cycles and
-    ``_rr``, for any region grid and worker count.
+    ``_rr``, for any region grid and worker count — including paused
+    windows (``stop_at``/``start``, see the engine-contract docstring in
+    ``engine.py``).  A :class:`WorkerFailure` from the fork backend
+    degrades the run to in-process execution that continues from the
+    failed epoch (region state rebuilt by op-log replay; coordinator
+    progress is never rewound).
     """
     cfg = cfg or ShardConfig()
     streams = sim.streams
@@ -1358,11 +1595,12 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
         return 0 if not streams else max(s.done_cycle for s in streams)
     grid, workers = cfg.resolve(sim.mesh)
     rr_base = sim._rr
-    state, regions, ws = _build(sim, grid)
+    state, regions, ws = _build(sim, grid, start)
     backend = None
     if workers > 1 and len(regions) > 1:
         try:
-            backend = _ForkBackend(regions, ws, max_cycles, workers)
+            backend = _ForkBackend(
+                regions, ws, max_cycles, workers, state, cfg.supervise)
         except Exception as exc:
             warnings.warn(
                 f"shard engine: worker processes unavailable ({exc!r}); "
@@ -1371,27 +1609,90 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
                 stacklevel=2,
             )
     if backend is None:
-        backend = _InProcBackend(regions, ws, max_cycles)
+        backend = _InProcBackend(regions, ws, max_cycles, state)
     if prof is not None:
         prof.regions = len(regions)
         prof.workers = getattr(backend, "workers_used", 0)
 
-    def fail(kind: str, cycle: int):
-        backend.collect()
-        stuck = [s for i, s in enumerate(streams) if state.live[i]]
-        return stuck_error(sim, kind, cycle, stuck)
-
     n_epochs = 0
     n_recon = 0
+    t0 = start
+    minb: dict = {}
+
+    def call(op: str, *args):
+        """Backend op with graceful degradation: on WorkerFailure, fall
+        back to the in-process backend over the parent's pristine regions,
+        replay the fork backend's op log to rebuild region state, then
+        re-execute the failed op — the run continues from the failed
+        epoch, it does not restart."""
+        nonlocal backend
+        try:
+            return getattr(backend, op)(*args)
+        except WorkerFailure as exc:
+            warnings.warn(
+                f"shard engine: degrading to in-process region execution "
+                f"({exc}); replaying {len(backend.log)} epoch op(s) and "
+                f"continuing from epoch {n_epochs}",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+            recovery = dict(backend.recovery)
+            recovery["worker_degradations"] = \
+                recovery.get("worker_degradations", 0) + 1
+            oplog = backend.log
+            backend.close()
+            backend = _InProcBackend(regions, ws, max_cycles, state)
+            backend.recovery = recovery
+            if prof is not None:
+                prof.workers = 0
+            for entry in oplog:
+                if entry[0] == "sim":
+                    backend.simulate(entry[1])
+                else:
+                    backend.reconcile(*entry[1:])
+            return getattr(backend, op)(*args)
+
+    def fail(kind: str, cycle: int, flagged=()):
+        call("collect")
+        stuck = [s for i, s in enumerate(streams) if state.live[i]]
+        err = stuck_error(sim, kind, cycle, stuck)
+        gx, gy = grid
+        cols, rows = sim.mesh.cols, sim.mesh.rows
+        lines = [
+            f"shard context: epoch {n_epochs}, t0={t0}"
+            + (f", flagged by region(s) {sorted(flagged)}" if flagged else "")
+        ]
+        show = sorted(flagged) if flagged else [r.rid for r in regions]
+        by_rid = {r.rid: r for r in regions}
+        for rid in show[:8]:
+            r = by_rid[rid]
+            rx, ry = rid % gx, rid // gx
+            x0, x1 = -(-rx * cols // gx), -(-(rx + 1) * cols // gx)
+            y0, y1 = -(-ry * rows // gy), -(-(ry + 1) * rows // gy)
+            n_stuck = sum(1 for f in r.frags if state.live[f.sidx])
+            b = minb.get(rid, INF)
+            lines.append(
+                f"  region {rid} [x {x0}..{x1 - 1}, y {y0}..{y1 - 1}]: "
+                f"{n_stuck} live fragment(s), next-event bound "
+                f"{'inf' if b == INF else int(b)}"
+            )
+        if len(show) > 8:
+            lines.append(f"  ... and {len(show) - 8} more region(s)")
+        return RuntimeError(str(err) + "\n" + "\n".join(lines))
+
+    paused = False
     try:
         deaths, releases = _process_finals(state, state.initial_finals)
         wanted = sorted({
             p for s in state.unreleased for p in state.gate_parents[s]
         })
-        minb, lbs = backend.reconcile({}, deaths, releases, wanted, {}, 0)
+        minb, lbs = call(
+            "reconcile", {}, deaths, releases, wanted, {}, start)
         state.gate_lb_reports.update(lbs)
-        t0 = 0
         while state.n_live:
+            if stop_at is not None and t0 >= stop_at:
+                paused = True
+                break
             m = min(minb.values(), default=INF)
             mg = _gated_constraint(state, t0)
             if mg < m:
@@ -1401,29 +1702,26 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
             # Epochs always advance time; regions flag the timeout
             # themselves when a pending event sits at or past max_cycles.
             T = max(int(m) + 1, t0 + 1)
-            replies = backend.simulate(T)
+            if stop_at is not None and T > stop_at:
+                T = stop_at
+            backend.epoch = n_epochs + 1
+            replies = call("simulate", T)
             n_epochs += 1
             fires_by_bid: dict = {}
             finals: list = []
-            timeout = False
+            flagged: list = []
             floor_updates: dict = {}
             for rid, (fires, rfinals, rtimeout, rfloors) in replies.items():
                 finals.extend(rfinals)
-                timeout = timeout or rtimeout
+                if rtimeout:
+                    flagged.append(rid)
                 floor_updates.update(rfloors)
                 for bid, tf in fires:
                     fires_by_bid.setdefault(bid, []).append(tf)
-            if timeout:
-                raise fail("deadlock/timeout", max_cycles)
-            deltas_by_region: dict = {}
+            if flagged:
+                raise fail("deadlock/timeout", max_cycles, flagged)
             for bid, cycles in fires_by_bid.items():
                 cycles.sort()
-                pw = backend.worker_of(state.bid_producer_region[bid])
-                for cr in state.bid_consumers[bid]:
-                    append = backend.worker_of(cr) != pw
-                    deltas_by_region.setdefault(cr, []).append(
-                        (bid, cycles, append)
-                    )
                 n_recon += len(cycles) * len(state.bid_consumers[bid])
             deaths, releases = _process_finals(state, finals)
             if not state.n_live:
@@ -1432,11 +1730,12 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
             wanted = sorted({
                 p for s in state.unreleased for p in state.gate_parents[s]
             })
-            minb, lbs = backend.reconcile(
-                deltas_by_region, deaths, releases, wanted, floor_updates, t0
+            minb, lbs = call(
+                "reconcile", fires_by_bid, deaths, releases, wanted,
+                floor_updates, t0,
             )
             state.gate_lb_reports.update(lbs)
-        counters = backend.collect()
+        counters = call("collect")
         if prof is not None:
             prof.epochs = n_epochs
             prof.boundary_reconciliations = n_recon
@@ -1445,6 +1744,11 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
                 prof.heap_pushes += push
                 prof.heap_pops += pop
                 prof.lazy_invalidations += stale
+            rec = getattr(backend, "recovery", None) or {}
+            prof.worker_retries += rec.get("worker_retries", 0)
+            prof.worker_respawns += rec.get("worker_respawns", 0)
+            prof.worker_degradations += rec.get("worker_degradations", 0)
     finally:
         backend.close()
-    return _finalize(sim, state, rr_base)
+    return _finalize(sim, state, rr_base, start,
+                     stop_at if paused else None)

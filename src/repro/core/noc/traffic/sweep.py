@@ -18,7 +18,11 @@ packets per node.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
+import os
+import time
 import warnings
 from typing import Optional, Sequence
 
@@ -110,6 +114,28 @@ def measure(
     return _aggregate_point(mesh, cfg, res, p)
 
 
+def _maybe_chaos(cfgs) -> None:
+    """Test hook: ``REPRO_SWEEP_CHAOS=<rate>:<times>:<counter-path>``
+    makes the first ``times`` chunk executions that contain ``rate`` fail.
+    An on-disk counter is the only channel that survives the process
+    boundary — monkeypatching cannot reach pool workers."""
+    spec = os.environ.get("REPRO_SWEEP_CHAOS")
+    if not spec:
+        return
+    rate_s, times_s, path = spec.split(":", 2)
+    if not any(abs(c.rate - float(rate_s)) < 1e-12 for c in cfgs):
+        return
+    n = 0
+    if os.path.exists(path):
+        with open(path) as f:
+            n = len(f.read().splitlines())
+    if n < int(times_s):
+        with open(path, "a") as f:
+            f.write("fail\n")
+        raise RuntimeError(
+            f"sweep chaos: injected chunk failure #{n + 1} at rate {rate_s}")
+
+
 def _sweep_chunk(args: tuple) -> list[SweepPoint]:
     """Top-level process-pool entry point (must be picklable): one chunk
     of sweep points, sharing a single compiled workload.  Each worker
@@ -118,6 +144,7 @@ def _sweep_chunk(args: tuple) -> list[SweepPoint]:
     mesh, cfgs, params, engine, compile_once = args
     if not cfgs:
         return []
+    _maybe_chaos(cfgs)
     if not compile_once:
         return [measure(mesh, cfg, params=params, engine=engine)
                 for cfg in cfgs]
@@ -133,6 +160,65 @@ def _sweep_chunk(args: tuple) -> list[SweepPoint]:
     ]
 
 
+JOURNAL_KIND = "repro-sweep-journal"
+JOURNAL_VERSION = 1
+
+
+def _journal_key(mesh, cfgs, params, engine, compile_once) -> str:
+    """Identity of one sweep invocation: sha256 over everything that
+    changes its results.  A journal written under a different key must
+    not be resumed from — mixed points would be silent garbage."""
+    p = params or NoCParams()
+    d = dataclasses.asdict(p)
+    d.pop("faults", None)
+    d["faults"] = p.faults.to_dict() if getattr(p, "faults", None) else None
+    doc = {
+        "mesh": [mesh.cols, mesh.rows],
+        "cfgs": [dataclasses.asdict(c) for c in cfgs],
+        "params": d,
+        "engine": engine,
+        "compile_once": bool(compile_once),
+    }
+    blob = json.dumps(doc, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _journal_load(path: str, key: str) -> dict[float, SweepPoint]:
+    """Completed points of a resumable journal (empty if none).  Raises
+    ``ValueError`` on a key mismatch; a truncated trailing line (crash
+    mid-append) is ignored."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        return {}
+    header = json.loads(lines[0])
+    if header.get("kind") != JOURNAL_KIND:
+        raise ValueError(f"{path} is not a {JOURNAL_KIND} file")
+    if header.get("key") != key:
+        raise ValueError(
+            f"sweep journal {path} was written by a different sweep "
+            f"configuration (key {header.get('key', '')[:16]}... vs "
+            f"{key[:16]}...); delete it or pass a different journal path")
+    out: dict[float, SweepPoint] = {}
+    for line in lines[1:]:
+        try:
+            d = json.loads(line)
+        except json.JSONDecodeError:
+            break  # torn final append from an interrupted run
+        pt = SweepPoint(**d["point"])
+        out[pt.rate] = pt
+    return out
+
+
+def _journal_append(path: str, pt: SweepPoint) -> None:
+    with open(path, "a") as f:
+        f.write(json.dumps({"rate": pt.rate,
+                            "point": dataclasses.asdict(pt)}) + "\n")
+        f.flush()
+
+
 def saturation_sweep(
     mesh: Mesh2D,
     pattern: str,
@@ -144,6 +230,9 @@ def saturation_sweep(
     engine: str = "heap",
     workers: int | None = None,
     compile_once: bool = True,
+    max_chunk_retries: int = 2,
+    retry_backoff_s: float = 0.5,
+    journal: str | None = None,
     **pattern_kw,
 ) -> list[SweepPoint]:
     """Latency/throughput curve over ``rates`` for one pattern + seed.
@@ -157,9 +246,28 @@ def saturation_sweep(
     records are cached in a
     :class:`~repro.core.noc.program.CompiledWorkload` and only the
     injection starts change per rate point; results are bit-identical
-    either way.  Falls back to serial execution (with a warning naming
-    the failure) if the platform cannot spawn processes.
+    either way.
+
+    Failure handling, from least to most severe:
+
+    * A chunk that fails (worker killed, pool broken mid-run) is retried
+      — only the failed chunks, in a fresh pool, with capped exponential
+      backoff (``retry_backoff_s * 2**attempt``, capped at 8s), up to
+      ``max_chunk_retries`` times.  Completed points are never
+      recomputed.
+    * Chunks still failing after the retry budget run serially, so a
+      deterministic error surfaces as itself rather than as a dead pool.
+    * A platform that cannot spawn processes at all falls back to serial
+      execution with a warning naming the cause.
+
+    ``journal`` names an on-disk JSONL file making the sweep resumable:
+    every completed point is appended as it lands, and a rerun of the
+    same sweep (same configuration — enforced by a fingerprint key)
+    skips the rates already journaled.  Results are identical to an
+    uninterrupted run.
     """
+    import concurrent.futures
+
     cfgs = [
         SyntheticConfig(
             pattern=pattern, rate=rate, nbytes=nbytes,
@@ -167,30 +275,92 @@ def saturation_sweep(
         )
         for rate in rates
     ]
-    if workers and workers > 1 and len(cfgs) > 1:
-        import concurrent.futures
-
-        nproc = min(workers, len(cfgs))
-        size = -(-len(cfgs) // nproc)
-        chunks = [cfgs[i:i + size] for i in range(0, len(cfgs), size)]
-        tasks = [(mesh, chunk, params, engine, compile_once)
-                 for chunk in chunks]
-        try:
-            with concurrent.futures.ProcessPoolExecutor(max_workers=nproc) as ex:
-                return [pt for pts in ex.map(_sweep_chunk, tasks)
-                        for pt in pts]
-        except (OSError, PermissionError, ImportError, NotImplementedError,
-                concurrent.futures.process.BrokenProcessPool) as exc:
-            # sandboxed / fork-less / wasm platform: run serially instead —
-            # and say so, naming the cause, because the silent version of
-            # this fallback turns "why is my sweep slow" into archaeology.
+    done: dict[float, SweepPoint] = {}
+    if journal is not None:
+        key = _journal_key(mesh, cfgs, params, engine, compile_once)
+        done = _journal_load(journal, key)
+        if not os.path.exists(journal) or os.path.getsize(journal) == 0:
+            with open(journal, "w") as f:
+                f.write(json.dumps({"kind": JOURNAL_KIND,
+                                    "version": JOURNAL_VERSION,
+                                    "key": key}) + "\n")
+        elif done:
             warnings.warn(
-                f"saturation_sweep: process pool unavailable ({exc!r}); "
-                f"running {len(cfgs)} sweep points serially",
-                RuntimeWarning,
-                stacklevel=2,
-            )
-    return _sweep_chunk((mesh, cfgs, params, engine, compile_once))
+                f"saturation_sweep: resuming from journal {journal} — "
+                f"{len(done)} of {len(cfgs)} point(s) already complete",
+                RuntimeWarning, stacklevel=2)
+
+    def record(pt: SweepPoint) -> None:
+        done[pt.rate] = pt
+        if journal is not None:
+            _journal_append(journal, pt)
+
+    todo = [c for c in cfgs if c.rate not in done]
+    if workers and workers > 1 and len(todo) > 1:
+        nproc = min(workers, len(todo))
+        size = -(-len(todo) // nproc)
+        pending = {i: todo[i:i + size] for i in range(0, len(todo), size)}
+        attempt = 0
+        pool_ok = True
+        while pending and pool_ok and attempt <= max_chunk_retries:
+            if attempt:
+                time.sleep(min(8.0, retry_backoff_s * 2 ** (attempt - 1)))
+            last_exc = None
+            try:
+                with concurrent.futures.ProcessPoolExecutor(
+                        max_workers=min(nproc, len(pending))) as ex:
+                    futs = {
+                        ex.submit(_sweep_chunk,
+                                  (mesh, chunk, params, engine,
+                                   compile_once)): i
+                        for i, chunk in pending.items()
+                    }
+                    for fut in concurrent.futures.as_completed(futs):
+                        i = futs[fut]
+                        try:
+                            pts = fut.result()
+                        except Exception as exc:
+                            last_exc = exc  # chunk stays pending
+                            continue
+                        for pt in pts:
+                            record(pt)
+                        del pending[i]
+            except (OSError, PermissionError, ImportError,
+                    NotImplementedError,
+                    concurrent.futures.process.BrokenProcessPool) as exc:
+                # sandboxed / fork-less / wasm platform: run serially
+                # instead — and say so, naming the cause, because the
+                # silent version of this fallback turns "why is my sweep
+                # slow" into archaeology.
+                warnings.warn(
+                    f"saturation_sweep: process pool unavailable "
+                    f"({exc!r}); running {len(pending)} chunk(s) "
+                    f"serially",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                pool_ok = False
+                break
+            if pending:
+                attempt += 1
+                if attempt <= max_chunk_retries:
+                    backoff = min(8.0, retry_backoff_s * 2 ** (attempt - 1))
+                    warnings.warn(
+                        f"saturation_sweep: {len(pending)} chunk(s) failed "
+                        f"({last_exc!r}); retrying failed chunks only "
+                        f"(attempt {attempt}/{max_chunk_retries}) after "
+                        f"{backoff:.2g}s backoff",
+                        RuntimeWarning,
+                        stacklevel=2,
+                    )
+        # retry budget exhausted (or pool gone): anything left runs
+        # serially below, so a deterministic failure raises as itself.
+    remaining = [c for c in cfgs if c.rate not in done]
+    if remaining:
+        for pt in _sweep_chunk((mesh, remaining, params, engine,
+                                compile_once)):
+            record(pt)
+    return [done[c.rate] for c in cfgs]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -169,9 +169,17 @@ def test_shard_worker_fallback_warns_and_stays_identical(monkeypatch):
         raise OSError("no fork for you")
 
     monkeypatch.setattr(multiprocessing, "get_context", refuse)
-    with pytest.warns(RuntimeWarning, match="no fork for you"):
+    with pytest.warns(RuntimeWarning, match="no fork for you") as rec:
         got = _fingerprint(Mesh2D(8, 4), 3, "shard:2x2:4")
     assert got == ref
+    # The warning must name the exception type and the fallback taken, so
+    # a CI log line is diagnosable without re-running under a debugger.
+    # rec may also hold unrelated warnings (e.g. the os.fork-under-JAX
+    # RuntimeWarning when jax was imported earlier in the suite).
+    msg = next(str(w.message) for w in rec
+               if "worker processes unavailable" in str(w.message))
+    assert "OSError" in msg
+    assert "in-process region execution" in msg
 
 
 # ---------------------------------------------------------------------------

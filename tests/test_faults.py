@@ -346,8 +346,14 @@ def test_run_program_warns_when_stamped_policy_needs_more_vcs():
     b = ProgramBuilder(MESH8)
     b.unicast((0, 0), (7, 7), 128)
     prog = dataclasses.replace(b.build(), routing="o1turn", num_vcs=1)
-    with pytest.warns(RuntimeWarning, match="o1turn.*num_vcs=1"):
+    with pytest.warns(RuntimeWarning, match="o1turn.*num_vcs=1") as rec:
         run_program(prog)
+    # The warning must state the policy, the stamped VC count AND the
+    # required one — "needs more VCs" without the number is useless.
+    msg = next(str(w.message) for w in rec
+               if "'o1turn'" in str(w.message))
+    assert "num_vcs=1" in msg
+    assert "needs >= 2" in msg
     import warnings
 
     with warnings.catch_warnings():

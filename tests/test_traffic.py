@@ -469,9 +469,14 @@ def test_sweep_pool_fallback_warns(monkeypatch):
     monkeypatch.setattr(concurrent.futures, "ProcessPoolExecutor", Broken)
     mesh = Mesh2D(4, 4)
     rates = (0.05, 0.2)
-    with pytest.warns(RuntimeWarning, match="pool refused"):
+    with pytest.warns(RuntimeWarning, match="pool refused") as rec:
         pts = saturation_sweep(mesh, "uniform", rates, params=P, workers=4)
     assert pts == saturation_sweep(mesh, "uniform", rates, params=P)
+    # Diagnosable from the log line alone: exception type + fallback taken.
+    msg = next(str(w.message) for w in rec
+               if "process pool unavailable" in str(w.message))
+    assert "OSError" in msg
+    assert "serially" in msg
 
 
 # ---------------------------------------------------------------------------
