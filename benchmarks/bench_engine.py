@@ -325,9 +325,14 @@ def rows(full128: bool | None = None):
     if full128:
         results["storm128"] = _storm128()
         results["sweep128_curve"] = _sweep128(workers)
+    from benchmarks.run import provenance
+
+    results["provenance"] = provenance()
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     out = []
     for name, rec in results.items():
+        if name == "provenance":
+            continue
         if name in ("sweep64_heap_curve", "sweep128_curve"):
             out.append((name, rec["wall_s"] * 1e6,
                         f"points={rec['points']};workers={rec['workers']};"

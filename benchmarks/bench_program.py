@@ -141,6 +141,9 @@ def rows():
         name: {"sha": sha, "matches_legacy": sha == GOLDEN_SHIMS[name]}
         for name, sha in got.items()
     }
+    from benchmarks.run import provenance
+
+    results["provenance"] = provenance()
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     out = []
     for rec in results["overlap"]:

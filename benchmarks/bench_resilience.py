@@ -188,6 +188,9 @@ def rows():
         "worker_kill_recovery": _worker_kill_recovery(),
         "midrun_vs_static": _midrun_vs_static(),
     }
+    from benchmarks.run import provenance
+
+    results["provenance"] = provenance()
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     co = results["checkpoint_overhead"]
     kr = results["worker_kill_recovery"]

@@ -116,6 +116,37 @@ def _row_sat(rec: dict, policy: str, num_vcs: int = 1) -> float:
     raise KeyError((policy, num_vcs))
 
 
+def _hot_links_record(side: int = 16, rate: float = 0.18, k: int = 8) -> dict:
+    """Per-policy hot-link tables on a loaded transpose population — the
+    *where* behind the saturation shifts: XY funnels the bisection onto a
+    few row/column channels (high peak utilization), O1TURN's pid-keyed
+    split and odd-even's adaptivity spread the same traffic across more
+    links (lower peak, more even top-k)."""
+    from repro.core.noc.telemetry import Collector
+    from repro.core.noc.traffic import SyntheticConfig, synthetic_trace
+
+    mesh = Mesh2D(side, side)
+    trace = synthetic_trace(mesh, SyntheticConfig(
+        pattern="transpose", rate=rate, nbytes=256, packets_per_node=8,
+        seed=0,
+    ))
+    out: dict = {"pattern": "transpose", "mesh": f"{side}x{side}",
+                 "rate": rate, "policies": {}}
+    for policy in POLICIES:
+        col = Collector()
+        res = replay(trace, params=PAPER_MICRO, routing=policy,
+                     num_vcs=2, telemetry=col)
+        stats = col.stats()
+        table = stats.link_table(k)
+        out["policies"][policy] = {
+            "makespan": res.makespan,
+            "total_busy_beats": stats.total_busy_beats(),
+            "peak_link_utilization": table[0]["utilization"] if table else 0.0,
+            "hot_links": table,
+        }
+    return out
+
+
 def rows():
     results: dict = {"sweeps": {}, "mixed_storm": {}}
     out = []
@@ -148,6 +179,17 @@ def rows():
             k: v["2"] < v["1"] for k, v in results["mixed_storm"].items()
         },
     }
+    hl = _hot_links_record()
+    results["hot_links"] = hl
+    peaks = {p: r["peak_link_utilization"]
+             for p, r in hl["policies"].items()}
+    out.append((
+        "hot_links/transpose16", 0.0,
+        ";".join(f"{p}_peak={peaks[p]}" for p in POLICIES),
+    ))
+    from benchmarks.run import provenance
+
+    results["provenance"] = provenance()
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     return out
 

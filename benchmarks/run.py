@@ -7,8 +7,38 @@ carries speedups, claim checks, byte counts, or bound labels.
 
 from __future__ import annotations
 
+import pathlib
+import platform
+import subprocess
 import sys
 import time
+
+
+def provenance(clock=None) -> dict:
+    """Run-attribution stamp for ``BENCH_*.json`` emitters: git sha,
+    platform, and a UTC timestamp from ``clock`` (injectable for tests;
+    defaults to ``time.time``).  Fields degrade to None outside a git
+    checkout rather than failing the bench."""
+    sha = None
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parent,
+        )
+        if out.returncode == 0:
+            sha = out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    now = (clock or time.time)()
+    return {
+        "git_sha": sha,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "generated_at": time.strftime(
+            "%Y-%m-%dT%H:%M:%SZ", time.gmtime(now)),
+    }
+
 
 MODULES = [
     ("Fig2b_barrier", "benchmarks.bench_barrier"),
@@ -23,6 +53,7 @@ MODULES = [
     ("Faults", "benchmarks.bench_faults"),
     ("Program", "benchmarks.bench_program"),
     ("Resilience", "benchmarks.bench_resilience"),
+    ("Telemetry", "benchmarks.bench_telemetry"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

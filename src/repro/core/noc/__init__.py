@@ -172,6 +172,33 @@
                                     machinery (CDG gate re-verified),
                                     resume; an empty timeline is
                                     bit-identical to a plain run
+``telemetry`` — opt-in fabric observability (zero overhead when off —
+                ``run(telemetry=None)`` is the exact committed-baseline
+                code path):
+                ``telemetry.collector`` ``Collector`` attaches via
+                                    ``NoCSim.run(telemetry=...)`` and
+                                    accumulates per-(link, VC) busy-beat
+                                    and retry counters plus per-tile
+                                    inject/eject totals at beat-advance
+                                    granularity — identical totals on
+                                    every engine by construction (the
+                                    heap/shard engines batch per-unit
+                                    fire counts and fold at run exit /
+                                    epoch reply); fault events annotate,
+                                    program runs record per-op spans;
+                                    windowed timeseries (live streams,
+                                    offered vs delivered bandwidth,
+                                    per-region occupancy) and stream
+                                    lifecycle spans derive lazily from
+                                    the attached sim; checkpoints carry
+                                    collector state bit-exactly
+                ``telemetry.stats`` ``FabricStats`` read-out: heatmap
+                                    grids, top-k hot-link tables, ASCII
+                                    rendering
+                ``telemetry.perfetto`` Chrome/Perfetto ``trace_event``
+                                    JSON export (comm/compute/stream/
+                                    fault lanes + counter tracks) for
+                                    ``ui.perfetto.dev``
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper, plus
                 ``load_claims``: saturation-aware checks of a sweep

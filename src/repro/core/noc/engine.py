@@ -157,21 +157,38 @@ class EngineProfile:
     def absorb(self, seg: "EngineProfile") -> None:
         """Fold one run segment's profile into this accumulator (used by
         checkpointed / timeline runs, which split one logical run into
-        several ``run()`` calls).  Scheduler work adds up; makespan and
-        the sim-cumulative fault/resilience counters take the latest
-        segment's value (``NoCSim._fault_counts`` already accumulates
-        across calls)."""
-        for k in ("advances", "heap_pushes", "heap_pops",
-                  "lazy_invalidations", "epochs", "boundary_reconciliations",
-                  "worker_retries", "worker_respawns", "worker_degradations"):
-            setattr(self, k, getattr(self, k) + getattr(seg, k))
-        for k in ("makespan", "retries_paid", "detoured_routes",
-                  "regrafted_trees", "fault_events", "relowered_streams",
-                  "dropped_streams"):
-            setattr(self, k, getattr(seg, k))
+        several ``run()`` calls).  Additive by default — every counter
+        not named in an exclusion set sums across segments, so a newly
+        added field folds correctly without touching this method.
+        ``ABSORB_LATEST`` fields take the latest segment's value
+        (makespan, plus the sim-cumulative fault/resilience counters that
+        ``NoCSim._fault_counts`` already accumulates across calls);
+        ``ABSORB_MAX`` fields keep the peak; ``ABSORB_SKIP`` fields are
+        handled explicitly below."""
+        for f in dataclasses.fields(self):
+            k = f.name
+            if k in ABSORB_SKIP:
+                continue
+            if k in ABSORB_LATEST:
+                setattr(self, k, getattr(seg, k))
+            elif k in ABSORB_MAX:
+                setattr(self, k, max(getattr(self, k), getattr(seg, k)))
+            else:
+                setattr(self, k, getattr(self, k) + getattr(seg, k))
         self.engine = seg.engine
-        self.regions = max(self.regions, seg.regions)
-        self.workers = max(self.workers, seg.workers)
+
+
+# absorb() exclusion sets: fields that do NOT sum across run segments.
+# Latest-wins: makespan plus the counters NoCSim._fault_counts already
+# accumulates sim-side across run() calls (summing would double-count).
+ABSORB_LATEST = frozenset({
+    "makespan", "retries_paid", "detoured_routes", "regrafted_trees",
+    "fault_events", "relowered_streams", "dropped_streams",
+})
+# Peak-wins: configuration extents, not work counters.
+ABSORB_MAX = frozenset({"regions", "workers"})
+# Non-numeric / handled explicitly in absorb().
+ABSORB_SKIP = frozenset({"engine"})
 
 
 def gate_dependents(streams: Sequence["_StreamState"]) -> dict[int, list["_StreamState"]]:
@@ -228,6 +245,7 @@ def run_event_driven(sim: "NoCSim", max_cycles: int,
     module docstring.
     """
     dependents = gate_dependents(sim.streams)
+    tel = getattr(sim, "telemetry", None)
     t = start
     limit = max_cycles if stop_at is None else min(max_cycles, stop_at)
     while t < limit:
@@ -256,6 +274,8 @@ def run_event_driven(sim: "NoCSim", max_cycles: int,
                 busy.update((e, vc) for e in links)
                 s.advance(group, t)  # resets the stream's ready_hint
                 progressed = True
+                if tel is not None:
+                    tel.count_group(s, group)
             if s.done_cycle is not None:
                 for dep in dependents.get(id(s), ()):
                     dep.gate_released()  # resets the dependent's ready_hint
@@ -354,6 +374,10 @@ def run_heap(sim: "NoCSim", max_cycles: int,
     # to the historical whole-link interning.
     link_id: dict = {}
     linkids: list = [None] * n          # per stream: per unit, tuple of ids
+    # Telemetry stays out of the hot loop: per-unit fire counts go into
+    # flat arrays and fold into the collector once at run exit.
+    tel = getattr(sim, "telemetry", None)
+    tfires: list = [None] * n
     for i, s in enumerate(streams):
         if not live[i]:
             continue
@@ -366,6 +390,8 @@ def run_heap(sim: "NoCSim", max_cycles: int,
             )
             for links in s._unit_links
         ]
+        if tel is not None:
+            tfires[i] = [0] * len(s._units)
         c = s.next_ready()
         if c is not None:
             if c < start:
@@ -428,6 +454,7 @@ def run_heap(sim: "NoCSim", max_cycles: int,
         for i in ordered:
             s = streams[i]
             lids = linkids[i]
+            tf = tfires[i]
             for ui in list(s.ready_units(t)):
                 links = lids[ui]
                 if any(e in busy for e in links):
@@ -435,6 +462,8 @@ def run_heap(sim: "NoCSim", max_cycles: int,
                 busy.update(links)
                 s.advance_unit(ui, t)
                 n_adv += 1
+                if tf is not None:
+                    tf[ui] += 1
             if s.done_cycle is not None:
                 finished.append(i)
                 continue
@@ -474,6 +503,10 @@ def run_heap(sim: "NoCSim", max_cycles: int,
         sim._rr = rr_base + (stop_at - start)
     else:
         sim._rr = rr_base + (t - start) + 1
+    if tel is not None:
+        for i, tf in enumerate(tfires):
+            if tf is not None:
+                tel.add_stream_fires(streams[i], tf)
     if prof is not None:
         prof.advances += n_adv
         prof.heap_pushes += n_push

@@ -798,6 +798,7 @@ class NoCSim:
         self._pkt_seq = 0  # per-sim packet id: O1TURN split, packet-mode VCs
         self.recorders: list = []  # traffic.trace.TraceRecorder et al.
         self.last_profile = None  # EngineProfile of the last run(profile=True)
+        self.telemetry = None  # telemetry.Collector when observability is on
 
     # -- arbitration counter -------------------------------------------------
 
@@ -975,7 +976,7 @@ class NoCSim:
 
     def run(self, max_cycles: int = 2_000_000, engine: str = "heap",
             profile: bool = False, stop_at: Optional[int] = None,
-            start_cycle: int = 0):
+            start_cycle: int = 0, telemetry=None):
         """Advance until all streams complete; returns the last done cycle
         (or an :class:`~repro.core.noc.engine.EngineProfile` carrying the
         makespan plus engine counters when ``profile=True``).
@@ -1002,12 +1003,23 @@ class NoCSim:
         uninterrupted run on every engine (same arrivals, done cycles and
         arbitration counter; see the pause/resume contract in
         ``noc.engine``).
+
+        ``telemetry`` attaches a :class:`~repro.core.noc.telemetry.Collector`
+        for this and subsequent runs (it sticks on ``self.telemetry``, so a
+        paused/restored sim keeps collecting without re-passing it).
+        Telemetry observes beat advances but never feeds back into
+        scheduling — the default ``telemetry=None`` path is untouched.
         """
         from repro.core.noc.engine import EngineProfile
 
         if stop_at is not None and stop_at < start_cycle:
             raise ValueError(
                 f"stop_at={stop_at} precedes start_cycle={start_cycle}")
+
+        if telemetry is not None:
+            self.telemetry = telemetry
+        if self.telemetry is not None:
+            self.telemetry.begin(self)
 
         # Exact deadlock gate for degraded runs: the unicast routes this
         # workload actually uses (base + detours) must have an acyclic
@@ -1056,6 +1068,7 @@ class NoCSim:
         from repro.core.noc.engine import gate_dependents, stuck_error
 
         dependents = gate_dependents(self.streams)
+        tel = self.telemetry
         t = start
         limit = max_cycles if stop_at is None else min(max_cycles, stop_at)
         while t < limit:
@@ -1074,6 +1087,8 @@ class NoCSim:
                     busy.update((e, vc) for e in links)
                     s.advance(group, t)
                     progressed = True
+                    if tel is not None:
+                        tel.count_group(s, group)
                 if s.done_cycle is not None:
                     for dep in dependents.get(id(s), ()):
                         dep.gate_released()

@@ -170,8 +170,13 @@ def run_program(
     overlap: str = "tiles",
     routing: Optional[str] = None,
     num_vcs: Optional[int] = None,
+    telemetry=None,
 ) -> ProgramResult:
-    """Execute a program under shared-fabric contention (see module doc)."""
+    """Execute a program under shared-fabric contention (see module doc).
+
+    ``telemetry`` attaches a :class:`~repro.core.noc.telemetry.Collector`
+    to the run's sim (every mode keeps the whole program on one sim) and
+    records per-op lifecycle spans on it when the run completes."""
     if mode not in MODES:
         raise ValueError(f"unknown replay mode {mode!r}; one of {MODES}")
     if overlap not in OVERLAPS:
@@ -199,10 +204,15 @@ def run_program(
                 stacklevel=2,
             )
     if mode == "op":
-        return _run_op(prog, p, max_cycles, engine)
-    if mode == "window":
-        return _run_window(prog, p, max_cycles, engine, overlap)
-    return _run_barrier(prog, p, max_cycles, engine)
+        res = _run_op(prog, p, max_cycles, engine, telemetry=telemetry)
+    elif mode == "window":
+        res = _run_window(prog, p, max_cycles, engine, overlap,
+                          telemetry=telemetry)
+    else:
+        res = _run_barrier(prog, p, max_cycles, engine, telemetry=telemetry)
+    if telemetry is not None:
+        telemetry.record_program(res)
+    return res
 
 
 def _phase_end(prog: Program, runs: list[OpRun]) -> list[float]:
@@ -221,7 +231,7 @@ def _phase_end(prog: Program, runs: list[OpRun]) -> list[float]:
 # ---------------------------------------------------------------------------
 
 
-def _run_op(prog, p, max_cycles, engine) -> ProgramResult:
+def _run_op(prog, p, max_cycles, engine, telemetry=None) -> ProgramResult:
     sim = NoCSim(prog.mesh, p)
     streams: list = []
     for op in prog.ops:
@@ -229,7 +239,7 @@ def _run_op(prog, p, max_cycles, engine) -> ProgramResult:
         if op.deps:
             st.gates = [streams[d] for d in op.deps]
         streams.append(st)
-    sim.run(max_cycles=max_cycles, engine=engine)
+    sim.run(max_cycles=max_cycles, engine=engine, telemetry=telemetry)
     runs = []
     for op, st in zip(prog.ops, streams):
         t0 = st._t0() or 0  # gates all drained after a successful run
@@ -247,7 +257,7 @@ def _run_op(prog, p, max_cycles, engine) -> ProgramResult:
 
 
 def _run_barrier(prog, p, max_cycles, engine, add=add_op,
-                 start_of=None) -> ProgramResult:
+                 start_of=None, telemetry=None) -> ProgramResult:
     """Phase-serialized execution.  ``add`` lowers one op onto the live
     sim — the default builds streams from scratch; the compile-once path
     (:class:`CompiledWorkload`) passes an adder that instantiates cached
@@ -279,7 +289,8 @@ def _run_barrier(prog, p, max_cycles, engine, add=add_op,
                 continue
             st = add(sim, op, start, p)
             added.append((op, st, start))
-        done: float = sim.run(max_cycles=max_cycles, engine=engine)
+        done: float = sim.run(max_cycles=max_cycles, engine=engine,
+                              telemetry=telemetry)
         for op, st, start in added:
             runs.append((op.id, OpRun(op, start, st.done_cycle)))
         for op, start in analytic:
@@ -307,7 +318,8 @@ def _run_barrier(prog, p, max_cycles, engine, add=add_op,
 # ---------------------------------------------------------------------------
 
 
-def _run_window(prog, p, max_cycles, engine, overlap) -> ProgramResult:
+def _run_window(prog, p, max_cycles, engine, overlap,
+                telemetry=None) -> ProgramResult:
     """One contended run with cross-phase footprint gating.
 
     Every non-barrier op becomes a stream up front; each stream gates,
@@ -363,7 +375,7 @@ def _run_window(prog, p, max_cycles, engine, overlap) -> ProgramResult:
             for el in foot:
                 cur_touch.setdefault(el, []).append(st)
         last_touch.update(cur_touch)
-    sim.run(max_cycles=max_cycles, engine=engine)
+    sim.run(max_cycles=max_cycles, engine=engine, telemetry=telemetry)
     runs = []
     for op, st in added:
         t0 = st._t0() or 0  # gates all drained after a successful run
@@ -441,12 +453,16 @@ class CompiledWorkload:
         max_cycles: int = 50_000_000,
         engine: str = "heap",
         start_of=None,
+        telemetry=None,
     ) -> ProgramResult:
         """Execute the compiled program (barrier-mode semantics)."""
-        return _run_barrier(
+        res = _run_barrier(
             self.prog, self.p, max_cycles, engine,
-            add=self._add, start_of=start_of,
+            add=self._add, start_of=start_of, telemetry=telemetry,
         )
+        if telemetry is not None:
+            telemetry.record_program(res)
+        return res
 
 
 def compile_workload(

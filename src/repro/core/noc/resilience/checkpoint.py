@@ -247,6 +247,12 @@ def checkpoint(sim: NoCSim, cycle: int) -> Snapshot:
         },
         "streams": [_enc_stream(st, index_of) for st in sim.streams],
     }
+    # Optional section, present only when observability is active: a sim
+    # without a collector snapshots byte-identically to every pre-telemetry
+    # checkpoint (same payload keys, same fingerprint).
+    tel = getattr(sim, "telemetry", None)
+    if tel is not None:
+        payload["telemetry"] = tel.state_dict()
     fp = hashlib.sha256(_canonical(payload)).hexdigest()
     return Snapshot(payload=payload, fingerprint=fp)
 
@@ -272,4 +278,8 @@ def restore(snap: Snapshot) -> NoCSim:
         for vc, deps in s["fault_deps"]
     }
     sim._fault_deps_dirty = s["fault_deps_dirty"]
+    if "telemetry" in payload:
+        from repro.core.noc.telemetry import Collector
+
+        sim.telemetry = Collector.from_state(payload["telemetry"])
     return sim

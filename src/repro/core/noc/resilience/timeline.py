@@ -282,6 +282,12 @@ def apply_fault_event(sim, ev: FaultEvent) -> dict:
             st.gates = [replaced.get(id(g), g) for g in st.gates]
         st._gate_t0 = None
         st.ready_hint = None
+    tel = getattr(sim, "telemetry", None)
+    if tel is not None:
+        tel.annotate(
+            tf, "fault_event",
+            f"{ev.faults.describe()}; relowered={n_relower}, "
+            f"dropped={n_drop}")
     return {"relowered": n_relower, "dropped": n_drop}
 
 

@@ -233,7 +233,7 @@ class _Frag:
         "sidx", "n_beats", "recs", "links", "fcount", "final_need",
         "consumers", "gate_t0", "export", "boundary", "uready", "uheap",
         "rlist", "rset", "stream", "gunits", "dpmeta", "dporder",
-        "local_done", "dp_cache", "dp_round", "base", "fast",
+        "local_done", "dp_cache", "dp_round", "base", "fast", "tfires",
     )
 
     def __init__(self, sidx, n_beats, recs, links, fcount, consumers,
@@ -255,6 +255,7 @@ class _Frag:
         self.rlist: list = []
         self.rset: set = set()
         self.dpmeta = None          # lazy: per (unit, edge) prereq origins
+        self.tfires = None          # telemetry: per local unit fire counts
         self.local_done = None      # cycle the local finals drained (if yet)
         self.dp_cache = None        # dp_bounds memo, valid for one round
         self.dp_round = -1
@@ -770,6 +771,7 @@ class _Region:
                 lks = f.links
                 exp = f.export
                 fcount = f.fcount
+                tf = f.tfires
                 for li in list(f.ready_units(t)):
                     if busy is not None:
                         ls = lks[li]
@@ -779,6 +781,8 @@ class _Region:
                             busy.update(ls)
                     f.advance_unit(li, t)
                     self.n_adv += 1
+                    if tf is not None:
+                        tf[li] += 1
                     bid = exp[li]
                     if bid is not None:
                         fires.append((bid, t))
@@ -798,6 +802,26 @@ class _Region:
         self.t = T - 1 if not timeout else t
         self.carry = carry
         return fires, finals, timeout
+
+    def flush_telemetry(self) -> list:
+        """Drain this region's per-unit fire counts accumulated since the
+        last flush, as picklable ``(stream index, global unit, fires)``
+        rows.  Called once per epoch reply: the coordinator folds exactly
+        one copy per simulated epoch, and because the flush resets the
+        accumulators, replayed epochs (worker recovery / fork-backend
+        degradation, whose replies are discarded) recompute deltas that
+        are discarded along with the rest of the reply."""
+        out = []
+        for f in self.frags:
+            tf = f.tfires
+            if tf is None:
+                continue
+            gunits = f.gunits
+            for li, n in enumerate(tf):
+                if n:
+                    out.append((f.sidx, gunits[li], n))
+                    tf[li] = 0
+        return out
 
     def report_floors(self) -> dict:
         """Per exported boundary unit: a currently valid lower bound on its
@@ -1052,6 +1076,8 @@ def _build(sim: "NoCSim", grid: tuple[int, int], start: int = 0):
                 sidx, st.n_beats, recs, links, fcount, consumers,
                 gate_t0, [None] * len(gunits), [], st, gunits,
             )
+            if sim.telemetry is not None:
+                frag.tfires = [0] * len(gunits)
             fidx = len(region.frags)
             region.frags.append(frag)
             region.by_sidx[sidx] = fidx
@@ -1137,9 +1163,11 @@ def _deltas_from_fires(fires_by_bid: dict, state: "_CoordState",
 
 def _simulate_regions(regions, T: int, max_cycles: int, ws: _WorkerState) -> dict:
     """Round A for one process's regions: run the epoch, report fires,
-    drained finals, timeout flags and boundary floors per region."""
+    drained finals, timeout flags, boundary floors and flushed telemetry
+    deltas per region."""
     return {
-        r.rid: r.run_to(T, max_cycles, ws) + (r.report_floors(),)
+        r.rid: r.run_to(T, max_cycles, ws)
+        + (r.report_floors(), r.flush_telemetry())
         for r in regions
     }
 
@@ -1595,6 +1623,7 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
         return 0 if not streams else max(s.done_cycle for s in streams)
     grid, workers = cfg.resolve(sim.mesh)
     rr_base = sim._rr
+    tel = sim.telemetry
     state, regions, ws = _build(sim, grid, start)
     backend = None
     if workers > 1 and len(regions) > 1:
@@ -1711,11 +1740,17 @@ def run_shard(sim: "NoCSim", max_cycles: int, cfg: ShardConfig | None = None,
             finals: list = []
             flagged: list = []
             floor_updates: dict = {}
-            for rid, (fires, rfinals, rtimeout, rfloors) in replies.items():
+            for rid, (fires, rfinals, rtimeout, rfloors,
+                      rtel) in replies.items():
                 finals.extend(rfinals)
                 if rtimeout:
                     flagged.append(rid)
                 floor_updates.update(rfloors)
+                if tel is not None:
+                    # Exactly one fold per simulated epoch: replayed
+                    # epochs' replies are discarded before reaching here.
+                    for sidx, gu, nf in rtel:
+                        tel.add_unit_fires(streams[sidx], gu, nf)
                 for bid, tf in fires:
                     fires_by_bid.setdefault(bid, []).append(tf)
             if flagged:

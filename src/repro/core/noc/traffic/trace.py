@@ -320,6 +320,7 @@ def replay(
     routing: Optional[str] = None,
     num_vcs: Optional[int] = None,
     overlap: str = "tiles",
+    telemetry=None,
 ) -> ReplayResult:
     """Run a trace through the simulator under shared-fabric contention.
 
@@ -353,7 +354,7 @@ def replay(
     res = run_program(
         from_trace(trace), params=params, max_cycles=max_cycles,
         engine=engine, mode=mode, overlap=overlap, routing=routing,
-        num_vcs=num_vcs,
+        num_vcs=num_vcs, telemetry=telemetry,
     )
     return result_to_replay(res)
 

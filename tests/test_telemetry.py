@@ -1,0 +1,430 @@
+"""Fabric telemetry subsystem: counters, spans, timelines.
+
+The invariants everything here defends:
+
+* **Invisible when off** — ``run(telemetry=None)`` (the default) is
+  bit-identical to the pre-telemetry engines on every engine; a sim
+  without a collector checkpoints to the exact payload it always did.
+* **Identical when on** — all four engines accumulate the same
+  :class:`FabricStats` on the same workload (counters are unit-granular,
+  and each engine reports unit fires at its own batching granularity).
+* **Checkpoint-exact** — a collector snapshotted mid-run and restored
+  continues into stats equal to an uninterrupted run's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+
+import pytest
+
+from repro.core.noc import engine as engine_mod
+from repro.core.noc.engine import (
+    ABSORB_LATEST,
+    ABSORB_MAX,
+    ABSORB_SKIP,
+    EngineProfile,
+)
+from repro.core.noc.faults.model import FaultSet
+from repro.core.noc.netsim import NoCSim
+from repro.core.noc.params import NoCParams
+from repro.core.noc.program import ProgramBuilder, run_program
+from repro.core.noc.resilience import (
+    FaultEvent,
+    FaultTimeline,
+    Snapshot,
+    checkpoint,
+    restore,
+    run_with_timeline,
+)
+from repro.core.noc.telemetry import (
+    Collector,
+    FabricStats,
+    TelemetryConfig,
+    perfetto_json,
+    render_heatmap,
+    trace_events,
+)
+from repro.core.topology import Coord, Mesh2D, MultiAddress
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+PLAIN = NoCParams()
+MULTIVC = NoCParams(routing="o1turn", num_vcs=3, vc_select="packet")
+FAULTED = NoCParams(
+    routing="oddeven", num_vcs=2,
+    faults=FaultSet.sample(Mesh2D(6, 6), dead_links=1, flaky_links=2,
+                           seed=3),
+)
+ENGINES = ("heap", "event", "cycle", "shard:2x2:1")
+
+
+def build_sim(params: NoCParams = PLAIN, seed: int = 7,
+              n_unicasts: int = 10) -> NoCSim:
+    """Mixed 6x6 workload: unicasts + multicast + reduction + a gated
+    stream (the ``test_resilience`` workload shape)."""
+    mesh = Mesh2D(6, 6)
+    sim = NoCSim(mesh, params)
+    rng = random.Random(seed)
+    tiles = [Coord(x, y) for x in range(6) for y in range(6)
+             if Coord(x, y) != Coord(4, 4)]
+    for _ in range(n_unicasts):
+        a, b = rng.sample(tiles, 2)
+        sim.add_unicast(a, b, 4096)
+    mc = sim.add_multicast(Coord(0, 0),
+                           MultiAddress(Coord(2, 2), 0b1, 0b1), 2048)
+    red = sim.add_reduction([Coord(5, 0), Coord(0, 5), Coord(5, 5)],
+                            Coord(3, 3), 2048)
+    gated = sim.add_unicast(Coord(1, 1), Coord(3, 5), 8192)
+    gated.gates.extend([mc, red])
+    return sim
+
+
+def _ekey(e):
+    (a, b) = e
+    return (a.x, a.y, b.x, b.y)
+
+
+def fingerprint(sim: NoCSim):
+    return ([(st.done_cycle,
+              sorted(((_ekey(e), tuple(arr))
+                      for e, arr in st.arrivals.items())),
+              st.vc) for st in sim.streams], sim._rr)
+
+
+# ---------------------------------------------------------------------------
+# Off = bit-identical; on = identical across engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("params", [PLAIN, MULTIVC, FAULTED],
+                         ids=["plain", "multivc", "faulted"])
+@pytest.mark.parametrize("engine", ENGINES)
+def test_telemetry_off_and_on_bit_identical(params, engine):
+    ref = build_sim(params)
+    mk = ref.run(engine=engine)
+    sim = build_sim(params)
+    assert sim.run(engine=engine, telemetry=Collector()) == mk
+    assert fingerprint(sim) == fingerprint(ref)
+
+
+@pytest.mark.parametrize("params", [PLAIN, MULTIVC, FAULTED],
+                         ids=["plain", "multivc", "faulted"])
+def test_counters_identical_across_engines(params):
+    base = None
+    for engine in ENGINES:
+        sim = build_sim(params)
+        col = Collector()
+        sim.run(engine=engine, telemetry=col)
+        stats = col.stats()
+        if base is None:
+            base = stats
+            assert stats.total_busy_beats() > 0
+            assert sum(stats.tile_inject.values()) > 0
+            assert sum(stats.tile_eject.values()) > 0
+        else:
+            assert stats == base, engine
+
+
+def test_counters_identical_with_fork_workers():
+    base_sim = build_sim()
+    base_col = Collector()
+    base_sim.run(engine="heap", telemetry=base_col)
+    sim = build_sim()
+    col = Collector()
+    sim.run(engine="shard:2x2:2", telemetry=col)
+    assert col.stats() == base_col.stats()
+
+
+def test_retries_counted_on_flaky_links():
+    sim = build_sim(FAULTED)
+    col = Collector()
+    sim.run(engine="heap", telemetry=col)
+    stats = col.stats()
+    # Retry charges are a strict subset of busy crossings, pinned to the
+    # flaky channels.
+    assert 0 < stats.total_retries() < stats.total_busy_beats()
+    for key, n in stats.link_retries.items():
+        assert n <= stats.link_busy[key]
+
+
+def test_link_free_streams_count_nothing():
+    sim = NoCSim(Mesh2D(4, 4), PLAIN)
+    sim.add_timed(Coord(1, 1), 50)
+    col = Collector()
+    sim.run(engine="heap", telemetry=col)
+    stats = col.stats()
+    assert stats.total_busy_beats() == 0
+    assert not stats.tile_inject and not stats.tile_eject
+
+
+# ---------------------------------------------------------------------------
+# FabricStats read-outs
+# ---------------------------------------------------------------------------
+
+
+def test_stats_heatmap_and_hot_links():
+    sim = build_sim()
+    col = Collector()
+    sim.run(engine="heap", telemetry=col)
+    stats = col.stats()
+    grid = stats.heatmap("link")
+    assert len(grid) == 6 and all(len(r) == 6 for r in grid)
+    assert sum(v for row in grid for v in row) == stats.total_busy_beats()
+    top = stats.top_links(5)
+    assert len(top) == 5
+    assert [n for _, n in top] == sorted((n for _, n in top), reverse=True)
+    table = stats.link_table(3)
+    assert table[0]["busy_beats"] == top[0][1]
+    assert 0 < table[0]["utilization"] <= 1.0
+    art = render_heatmap(stats, "link")
+    assert len(art.splitlines()) == 7  # header + 6 mesh rows
+
+
+def test_timeseries_conserves_beats():
+    # Unicast-only: offered == delivered on a completed run (collectives
+    # legitimately break the equality — a multicast beat is offered once
+    # and delivered once per destination, a reduction the reverse).
+    sim = NoCSim(Mesh2D(6, 6), PLAIN)
+    rng = random.Random(7)
+    tiles = [Coord(x, y) for x in range(6) for y in range(6)]
+    for _ in range(10):
+        a, b = rng.sample(tiles, 2)
+        sim.add_unicast(a, b, 4096)
+    col = Collector(TelemetryConfig(window=32))
+    sim.run(engine="heap", telemetry=col)
+    samples = col.timeseries()
+    offered = sum(s["offered_beats"] for s in samples)
+    delivered = sum(s["delivered_beats"] for s in samples)
+    assert delivered > 0
+    # A completed run delivers every offered beat.
+    assert offered == delivered
+    assert max(s["live_streams"] for s in samples) > 0
+    occ = sum(n for s in samples for n in s["region_busy"].values())
+    assert occ == col.stats().total_busy_beats()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry x resilience: checkpoint mid-run with collectors active
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_checkpoint_merges_collector_state(engine):
+    full = build_sim()
+    full_col = Collector()
+    mk = full.run(engine=engine, telemetry=full_col)
+    cut = max(1, mk // 2)
+    sim = build_sim()
+    col = Collector()
+    assert sim.run(engine=engine, telemetry=col, stop_at=cut) == cut
+    # Full text round-trip: what restore sees is what disk would hold.
+    snap = Snapshot.from_json(checkpoint(sim, cut).to_json())
+    resumed = restore(snap)
+    assert resumed.telemetry is not None
+    assert resumed.run(engine=engine, start_cycle=cut) == mk
+    assert resumed.telemetry.stats() == full_col.stats()
+    assert fingerprint(resumed) == fingerprint(full)
+
+
+def test_checkpoint_without_collector_is_unchanged():
+    # The optional telemetry section must not perturb a plain snapshot:
+    # same payload keys, same fingerprint as before the subsystem existed.
+    a = build_sim()
+    a.run(engine="heap", stop_at=20)
+    plain = checkpoint(a, 20)
+    assert "telemetry" not in plain.payload
+    b = build_sim()
+    b.run(engine="heap", stop_at=20, telemetry=Collector())
+    with_tel = checkpoint(b, 20)
+    assert "telemetry" in with_tel.payload
+    stripped = dict(with_tel.payload)
+    stripped.pop("telemetry")
+    assert stripped == plain.payload
+
+
+def test_collector_state_dict_roundtrip():
+    sim = build_sim(FAULTED)
+    col = Collector(TelemetryConfig(window=16, topk=4, region_grid=(3, 2)))
+    sim.run(engine="heap", telemetry=col)
+    col.annotate(5, "note", "hand annotation")
+    state = json.loads(json.dumps(col.state_dict()))
+    back = Collector.from_state(state)
+    assert back.link_busy == col.link_busy
+    assert back.link_retries == col.link_retries
+    assert back.tile_inject == col.tile_inject
+    assert back.tile_eject == col.tile_eject
+    assert back.annotations == col.annotations
+    assert back.config == col.config
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        cut_frac=hst.floats(min_value=0.05, max_value=0.95),
+        engine=hst.sampled_from(ENGINES),
+        seed=hst.integers(min_value=0, max_value=5),
+    )
+    def test_checkpoint_merge_property(cut_frac, engine, seed):
+        """Any cut point, any engine, any workload seed: the restored
+        collector's merged stats equal the uninterrupted run's."""
+        full = build_sim(seed=seed)
+        full_col = Collector()
+        mk = full.run(engine="heap", telemetry=full_col)
+        cut = max(1, int(mk * cut_frac))
+        sim = build_sim(seed=seed)
+        col = Collector()
+        sim.run(engine=engine, telemetry=col, stop_at=cut)
+        resumed = restore(checkpoint(sim, cut))
+        resumed.run(engine=engine, start_cycle=cut)
+        assert resumed.telemetry.stats() == full_col.stats()
+
+
+# ---------------------------------------------------------------------------
+# Program spans + Perfetto export
+# ---------------------------------------------------------------------------
+
+
+def _program():
+    b = ProgramBuilder(Mesh2D(4, 4))
+    a = b.unicast(Coord(0, 0), Coord(3, 3), 512)
+    b.compute(Coord(1, 1), 40, deps=[a])
+    b.unicast(Coord(3, 3), Coord(0, 0), 256, phase=1)
+    return b.build()
+
+
+@pytest.mark.parametrize("mode", ["op", "barrier", "window"])
+def test_program_spans_and_lanes(mode):
+    col = Collector()
+    res = run_program(_program(), mode=mode, telemetry=col)
+    assert len(col.ops) == len(res.runs)
+    lanes = {lane for _, lane, _, _ in col.ops}
+    assert lanes == {"comm", "compute"}
+    for _label, _lane, start, end in col.ops:
+        assert end >= start >= 0.0
+
+
+def test_perfetto_roundtrip_and_monotonic():
+    col = Collector()
+    run_program(_program(), mode="op", telemetry=col)
+    col.annotate(3, "fault_event", "synthetic")
+    data = json.loads(perfetto_json(col))
+    events = data["traceEvents"]
+    assert events, "empty trace"
+    # Metadata lanes first, then spans/instants/counters by timestamp.
+    kinds = {e["ph"] for e in events}
+    assert {"M", "X"} <= kinds and "i" in kinds and "C" in kinds
+    ts = [e["ts"] for e in events if e["ph"] != "M"]
+    assert ts == sorted(ts)
+    # Spans carry names resolvable without the collector in hand.
+    names = {e["name"] for e in events if e["ph"] == "X"}
+    assert any(n.startswith("unicast#") for n in names)
+
+
+def test_stream_spans_cover_run():
+    sim = build_sim()
+    col = Collector()
+    mk = sim.run(engine="heap", telemetry=col)
+    spans = col.stream_spans()
+    assert len(spans) == len(sim.streams)
+    assert max(s["done"] for s in spans) == mk
+    for s in spans:
+        assert s["done"] >= s["last_arrival"] >= s["first_beat"]
+    # The gated stream releases strictly after its gates drain.
+    gated = spans[-1]
+    assert gated["created"] > 0
+
+
+def test_timeline_fault_events_annotate():
+    sim = build_sim(seed=11)
+    ref_mk = build_sim(seed=11).run(engine="heap")
+    fs = FaultSet.sample(Mesh2D(6, 6), flaky_links=2, seed=5)
+    tl = FaultTimeline([FaultEvent(max(1, ref_mk // 3), fs)])
+    col = Collector()
+    sim.telemetry = col
+    run_with_timeline(sim, tl, engine="heap")
+    kinds = [k for _, k, _ in col.annotations]
+    assert kinds == ["fault_event"]
+    cycle, _, detail = col.annotations[0]
+    assert cycle == max(1, ref_mk // 3)
+    assert "relowered=" in detail
+
+
+# ---------------------------------------------------------------------------
+# EngineProfile.absorb(): fields-driven folding
+# ---------------------------------------------------------------------------
+
+
+def test_absorb_exclusion_sets_are_fields():
+    names = {f.name for f in dataclasses.fields(EngineProfile)}
+    assert ABSORB_LATEST <= names
+    assert ABSORB_MAX <= names
+    assert ABSORB_SKIP <= names
+    assert not (ABSORB_LATEST & ABSORB_MAX)
+
+
+def test_absorb_sums_adds_latest_and_max():
+    a = EngineProfile(engine="heap", makespan=10, advances=5, epochs=1,
+                      regions=2, retries_paid=3)
+    b = EngineProfile(engine="shard", makespan=25, advances=7, epochs=4,
+                      regions=6, retries_paid=9)
+    a.absorb(b)
+    assert a.engine == "shard"
+    assert a.makespan == 25            # latest
+    assert a.retries_paid == 9         # latest (sim-cumulative)
+    assert a.advances == 12            # additive
+    assert a.epochs == 5               # additive
+    assert a.regions == 6              # max
+
+
+def test_absorb_folds_newly_added_counters():
+    """Regression: a counter added to the profile must fold additively by
+    default — the hand-listed absorb() silently dropped new fields."""
+
+    @dataclasses.dataclass
+    class Extended(EngineProfile):
+        new_counter: int = 0
+
+    a = Extended(new_counter=3)
+    b = Extended(new_counter=4)
+    a.absorb(b)
+    assert a.new_counter == 7
+
+
+# ---------------------------------------------------------------------------
+# Bench provenance stamps
+# ---------------------------------------------------------------------------
+
+
+def test_provenance_stamp_with_injected_clock():
+    from benchmarks.run import provenance
+
+    stamp = provenance(clock=lambda: 1700000000.0)
+    assert stamp["generated_at"] == "2023-11-14T22:13:20Z"
+    assert stamp["python"]
+    assert stamp["platform"]
+    # In this checkout the sha resolves; degrade-to-None is allowed
+    # elsewhere, a non-None value must look like a sha.
+    if stamp["git_sha"] is not None:
+        assert len(stamp["git_sha"]) == 40
+
+
+def test_bench_jsons_carry_provenance():
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    stamped = 0
+    for p in sorted(root.glob("BENCH_*.json")):
+        rec = json.loads(p.read_text())
+        if "provenance" in rec:
+            assert "generated_at" in rec["provenance"], p.name
+            stamped += 1
+    assert stamped > 0
