@@ -1,0 +1,233 @@
+"""Simulation-service benchmarks: warm vs cold throughput, streaming
+latency, concurrent-client scaling — and the end-to-end CI gate.
+
+The service's pitch is that design-space exploration is redundant:
+grids overlap across clients and reruns, so a persistent server with a
+compile cache and a completed-point memo should serve repeat work at
+memory speed.  Rows in ``BENCH_service.json``:
+
+* ``warm_vs_cold`` — the same sweep grid submitted cold (every point
+  simulated) and again warm (every point a memo hit), points/sec each;
+  the smoke gate requires warm >= ``WARM_SPEEDUP_FLOOR`` x cold *and*
+  the warm rows bit-identical to the cold ones.
+* ``first_row_latency`` — time to the first streamed row vs time to
+  job completion (chunked single-rate dispatches): the streaming
+  advantage over the batch ``saturation_sweep`` call.
+* ``concurrent_clients`` — one shared grid from 1 vs 3 concurrent
+  clients: wall time, aggregate points/sec and the measured coalescing
+  hit rate (deterministically 2/3 for 3 clients on a cold server).
+
+Run standalone as a CI gate::
+
+    PYTHONPATH=src python -m benchmarks.bench_service --smoke
+
+The smoke additionally SIGKILLs a worker mid-chunk and requires the
+recovered run to stay bit-identical to the direct
+``saturation_sweep`` — the full resilience story in one gate.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+from repro.core.noc.service import ServiceClient, SimulationServer
+from repro.core.noc.traffic.sweep import saturation_sweep
+from repro.core.topology import Mesh2D
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_service.json"
+
+WARM_SPEEDUP_FLOOR = 3.0   # warm (memoized) points/sec >= 3x cold
+
+GRID = dict(mesh=(8, 8), pattern="transpose",
+            rates=[0.02, 0.04, 0.06, 0.08, 0.1, 0.12],
+            packets_per_node=4, seed=7)
+
+
+def _direct_points():
+    return saturation_sweep(Mesh2D(*GRID["mesh"]), GRID["pattern"],
+                            GRID["rates"],
+                            packets_per_node=GRID["packets_per_node"],
+                            seed=GRID["seed"])
+
+
+def _warm_vs_cold() -> dict:
+    direct = _direct_points()
+    with SimulationServer(workers=2, chunk_tokens=3) as srv:
+        with ServiceClient(srv.path) as cli:
+            t0 = time.perf_counter()
+            cold_pts = cli.submit_sweep(**GRID).sweep_points()
+            cold_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            warm_pts = cli.submit_sweep(**GRID).sweep_points()
+            warm_s = time.perf_counter() - t0
+            stats = cli.stats()
+    n = len(GRID["rates"])
+    return {
+        "grid_points": n,
+        "cold_s": round(cold_s, 4),
+        "warm_s": round(warm_s, 4),
+        "cold_points_per_s": round(n / cold_s, 2),
+        "warm_points_per_s": round(n / warm_s, 2),
+        "speedup_x": round(cold_s / max(warm_s, 1e-9), 2),
+        "floor_x": WARM_SPEEDUP_FLOOR,
+        "memoized_identical": warm_pts == cold_pts,
+        "direct_identical": cold_pts == direct,
+        "memo_hits": stats["points"]["memo_hits"],
+        "computed": stats["points"]["computed"],
+    }
+
+
+def _first_row_latency() -> dict:
+    with SimulationServer(workers=2, chunk_tokens=1) as srv:
+        with ServiceClient(srv.path) as cli:
+            t0 = time.perf_counter()
+            h = cli.submit_sweep(**GRID)
+            first_s = done_s = None
+            for _idx, _row in h.iter_rows():
+                if first_s is None:
+                    first_s = time.perf_counter() - t0
+            done_s = time.perf_counter() - t0
+    return {
+        "first_row_s": round(first_s, 4),
+        "done_s": round(done_s, 4),
+        "stream_advantage_x": round(done_s / max(first_s, 1e-9), 2),
+    }
+
+
+def _run_clients(srv, n: int) -> tuple[float, list]:
+    results = [None] * n
+    errors: list = []
+
+    def run(i: int) -> None:
+        try:
+            with ServiceClient(srv.path) as cli:
+                results[i] = cli.submit_sweep(**GRID).sweep_points()
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(n)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    wall = time.perf_counter() - t0
+    if errors:
+        raise RuntimeError(f"client failures: {errors!r}")
+    return wall, results
+
+
+def _concurrent_clients() -> dict:
+    n_points = len(GRID["rates"])
+    with SimulationServer(workers=2, chunk_tokens=3) as srv:
+        solo_wall, _ = _run_clients(srv, 1)
+    with SimulationServer(workers=2, chunk_tokens=3) as srv:
+        multi_wall, results = _run_clients(srv, 3)
+        with ServiceClient(srv.path) as cli:
+            stats = cli.stats()
+    identical = all(r == results[0] for r in results)
+    return {
+        "clients": 3,
+        "solo_wall_s": round(solo_wall, 4),
+        "multi_wall_s": round(multi_wall, 4),
+        "solo_points_per_s": round(n_points / solo_wall, 2),
+        "multi_points_per_s": round(3 * n_points / multi_wall, 2),
+        "identical_across_clients": identical,
+        "hit_rate": round(stats["points"]["hit_rate"], 4),
+        "computed": stats["points"]["computed"],
+    }
+
+
+def rows():
+    results = {
+        "warm_vs_cold": _warm_vs_cold(),
+        "first_row_latency": _first_row_latency(),
+        "concurrent_clients": _concurrent_clients(),
+    }
+    from benchmarks.run import provenance
+
+    results["provenance"] = provenance()
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    wc = results["warm_vs_cold"]
+    fr = results["first_row_latency"]
+    cc = results["concurrent_clients"]
+    return [
+        ("warm_vs_cold", wc["warm_s"] * 1e6,
+         f"cold={wc['cold_points_per_s']}pts/s;"
+         f"warm={wc['warm_points_per_s']}pts/s;x{wc['speedup_x']};"
+         f"identical={wc['memoized_identical'] and wc['direct_identical']}"),
+        ("first_row_latency", fr["first_row_s"] * 1e6,
+         f"done={fr['done_s']}s;stream_x{fr['stream_advantage_x']}"),
+        ("concurrent_clients", cc["multi_wall_s"] * 1e6,
+         f"solo={cc['solo_points_per_s']}pts/s;"
+         f"x3={cc['multi_points_per_s']}pts/s;"
+         f"hit_rate={cc['hit_rate']}"),
+    ]
+
+
+def smoke() -> int:
+    """CI gate for the simulation service.
+
+    * Warm (memoized) resubmission bit-identical to the cold run and to
+      the direct ``saturation_sweep``, at >= ``WARM_SPEEDUP_FLOOR`` x
+      cold throughput.
+    * 3 concurrent clients on one shared grid: every client's rows
+      bit-identical to the direct call, measured hit rate > 0.5.
+    * A SIGKILLed worker's chunk is retried: rows still bit-identical,
+      at least one respawn recorded.
+    """
+    wc = _warm_vs_cold()
+    print(json.dumps(wc, indent=2))
+    if not (wc["memoized_identical"] and wc["direct_identical"]):
+        print("FAIL: memoized rows differ from fresh/direct rows")
+        return 1
+    if wc["speedup_x"] < WARM_SPEEDUP_FLOOR:
+        print(f"FAIL: warm-cache speedup x{wc['speedup_x']} below "
+              f"floor x{WARM_SPEEDUP_FLOOR}")
+        return 1
+
+    direct = _direct_points()
+    with SimulationServer(workers=2, chunk_tokens=3) as srv:
+        _wall, results = _run_clients(srv, 3)
+        with ServiceClient(srv.path) as cli:
+            stats = cli.stats()
+    if any(r != direct for r in results):
+        print("FAIL: a concurrent client's rows differ from the direct "
+              "saturation_sweep")
+        return 1
+    hit_rate = stats["points"]["hit_rate"]
+    if hit_rate <= 0.5:
+        print(f"FAIL: measured cache hit rate {hit_rate} <= 0.5 on the "
+              f"3-client overlapping grid")
+        return 1
+
+    with SimulationServer(workers=2, chunk_tokens=2) as srv:
+        srv.scheduler.chaos_kill_after = 1
+        with ServiceClient(srv.path) as cli:
+            pts = cli.submit_sweep(**GRID).sweep_points()
+            st = cli.stats()
+    if pts != direct:
+        print("FAIL: rows after worker SIGKILL differ from direct run")
+        return 1
+    if st["worker_respawns"] < 1:
+        print(f"FAIL: chaos kill produced no respawn: {st}")
+        return 1
+
+    print(f"OK: warm x{wc['speedup_x']} >= x{WARM_SPEEDUP_FLOOR} "
+          f"bit-identical; 3-client hit rate {hit_rate:.3f} > 0.5 "
+          f"bit-identical; worker-kill recovery with "
+          f"{st['worker_respawns']} respawn(s), "
+          f"{st['chunk_retries']} retried chunk(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    for name, us, derived in rows():
+        print(f"{name},{us},{derived}")

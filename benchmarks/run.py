@@ -54,6 +54,7 @@ MODULES = [
     ("Program", "benchmarks.bench_program"),
     ("Resilience", "benchmarks.bench_resilience"),
     ("Telemetry", "benchmarks.bench_telemetry"),
+    ("Service", "benchmarks.bench_service"),
     ("HLO_schedules", "benchmarks.bench_schedule_hlo"),
     ("Kernels", "benchmarks.bench_kernels"),
     ("Claims", "benchmarks.bench_claims"),

@@ -199,6 +199,34 @@
                                     JSON export (comm/compute/stream/
                                     fault lanes + counter tracks) for
                                     ``ui.perfetto.dev``
+``service``   — simulation-as-a-service: a persistent local evaluation
+                server over the direct APIs:
+                ``service.jobs``    declarative job documents (sweep /
+                                    policy-compare / run-program) with
+                                    canonical fingerprints and the
+                                    single ``execute_workload`` path
+                                    every result goes through
+                ``service.cache``   compiled-workload LRU + completed-
+                                    point result memo keyed on the
+                                    shared ``noc.fingerprint`` keys,
+                                    with exact hit/miss/eviction
+                                    accounting
+                ``service.scheduler`` slot-based dispatch over
+                                    persistent supervised fork workers
+                                    (per-client fairness, in-flight
+                                    point coalescing, kill/wedge
+                                    recovery with chunk retry,
+                                    degradation to in-process)
+                ``service.server`` / ``service.client``  local-socket
+                                    JSONL protocol: concurrent clients,
+                                    streamed result rows, cancellation;
+                                    rows are bit-identical to calling
+                                    ``saturation_sweep`` /
+                                    ``run_program`` directly
+``fingerprint`` — the one canonical sha256 module behind every
+                content-addressed key (sweep-journal keys, checkpoint
+                fingerprints, service workload/point identities), with
+                the historical byte forms preserved exactly
 ``energy``    — Table-1 energy model and Fig-10 scaling
 ``calibrate`` — validation of every numeric claim in the paper, plus
                 ``load_claims``: saturation-aware checks of a sweep

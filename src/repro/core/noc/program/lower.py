@@ -447,6 +447,15 @@ class CompiledWorkload:
     def _add(self, sim: NoCSim, op: Op, start: float, p: NoCParams):
         return self._specs[op.id].instantiate(sim, start)
 
+    def fingerprint(self, engine: str = "heap") -> str:
+        """Canonical sha256 identity of this compiled workload — what the
+        service layer's compile cache and result memo key on (see
+        :mod:`repro.core.noc.fingerprint`): the program's schema-v3
+        serialization, the *effective* parameters, and the engine."""
+        from repro.core.noc.fingerprint import workload_fingerprint
+
+        return workload_fingerprint(self.prog, self.p, engine=engine)
+
     def run(
         self,
         *,

@@ -170,8 +170,12 @@ def _dec_stream(d: dict) -> _StreamState:
 
 
 def _canonical(payload: dict) -> bytes:
-    return json.dumps(payload, sort_keys=True,
-                      separators=(",", ":")).encode()
+    # Shared canonical form (fingerprint.canonical_json, compact):
+    # byte-identical to the historical local implementation, so every
+    # committed snapshot still validates.
+    from repro.core.noc.fingerprint import canonical_json
+
+    return canonical_json(payload, compact=True)
 
 
 # -- snapshot ----------------------------------------------------------------

@@ -1,0 +1,50 @@
+"""Simulation-as-a-service: a persistent NoC evaluation server.
+
+Design-space exploration hammers the same simulations from many
+callers — parameter sweeps share (mesh, params, population) points,
+CI jobs re-run yesterday's grids, notebook users iterate on one corner.
+This package turns the one-shot ``saturation_sweep`` / ``run_program``
+APIs into a long-lived local service that exploits that redundancy:
+
+``jobs``
+    Declarative job documents (sweep / policy-compare / run-program)
+    with canonical fingerprints, and the single
+    :func:`~.jobs.execute_workload` path every result is computed
+    through.
+``cache``
+    The compile-artifact LRU and the completed-point result memo, with
+    exact hit/miss/eviction accounting.
+``scheduler``
+    Slot-based dispatch over persistent supervised fork workers:
+    per-client fairness, in-flight point coalescing, worker
+    kill/wedge recovery with chunk retry, degradation to in-process.
+``server`` / ``client``
+    A local-socket JSONL protocol with concurrent clients, streamed
+    result rows and cancellation.
+
+The contract throughout: every row a client receives is bit-identical
+to calling the direct API yourself — memoized or freshly computed,
+fanned out or serial (the service runs the exact compile-once
+``measure``/``run_program`` code paths; tests assert equality field by
+field).
+"""
+
+from repro.core.noc.service.cache import (  # noqa: F401
+    CacheStats,
+    CompileCache,
+    ResultMemo,
+)
+from repro.core.noc.service.client import (  # noqa: F401
+    JobHandle,
+    ServiceClient,
+    ServiceError,
+)
+from repro.core.noc.service.jobs import (  # noqa: F401
+    PolicyCompareJob,
+    RunProgramJob,
+    SweepJob,
+    execute_workload,
+    job_from_doc,
+)
+from repro.core.noc.service.scheduler import Scheduler  # noqa: F401
+from repro.core.noc.service.server import SimulationServer  # noqa: F401

@@ -1,0 +1,297 @@
+"""Blocking client for the simulation service socket protocol.
+
+:class:`ServiceClient` connects to a :class:`~.server.SimulationServer`
+socket and exposes the three job kinds as typed submit calls, each
+returning a :class:`JobHandle` that streams rows as the service
+completes them:
+
+>>> with ServiceClient(server.path) as cli:
+...     h = cli.submit_sweep(mesh=(8, 8), pattern="transpose",
+...                          rates=[0.02, 0.05, 0.1])
+...     for index, row in h.iter_rows():   # completion order
+...         ...
+...     points = h.sweep_points()          # rate order, SweepPoint objects
+
+Rows are exactly the direct API's results — ``sweep_points()`` rebuilds
+the :class:`~repro.core.noc.traffic.sweep.SweepPoint` dataclasses
+field-identically (JSON floats round-trip exactly), and
+``policy_sweeps()`` regroups a policy-compare job into the same
+:class:`~repro.core.noc.traffic.sweep.PolicySweep` rows
+``compare_policies`` returns.
+
+One reader thread demultiplexes events into per-job buffers under a
+condition variable; any number of jobs can be in flight concurrently on
+one connection.  A job that ends in ``error`` raises
+:class:`ServiceError` from whichever accessor is waiting on it.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import threading
+from typing import Iterator, Optional
+
+from repro.core.noc.service.jobs import (
+    PolicyCompareJob,
+    RunProgramJob,
+    SweepJob,
+)
+
+
+class ServiceError(RuntimeError):
+    """The service rejected or failed a job (deterministic execution
+    errors surface here, named — never as a hang or a retry loop)."""
+
+
+class _JobState:
+    __slots__ = ("req", "accepted", "rows", "terminal", "message")
+
+    def __init__(self, req: str):
+        self.req = req
+        self.accepted: Optional[dict] = None
+        self.rows: dict[int, object] = {}
+        self.terminal: Optional[str] = None   # done/cancelled/error
+        self.message = ""
+
+
+class JobHandle:
+    """One submitted job: streamed rows plus typed result accessors."""
+
+    def __init__(self, client: "ServiceClient", state: _JobState):
+        self._client = client
+        self._state = state
+
+    @property
+    def rows_total(self) -> int:
+        self._client._wait(lambda: self._state.accepted is not None
+                           or self._state.terminal is not None)
+        if self._state.accepted is None:
+            raise ServiceError(self._state.message or "job rejected")
+        return self._state.accepted["rows_total"]
+
+    @property
+    def fingerprint(self) -> str:
+        self.rows_total
+        return self._state.accepted["fingerprint"]
+
+    def iter_rows(self) -> Iterator[tuple[int, object]]:
+        """Yield ``(index, row)`` pairs in completion order — streaming:
+        rows of finished chunks arrive while others still simulate."""
+        yielded: set = set()
+        st = self._state
+        while True:
+            self._client._wait(
+                lambda: len(st.rows) > len(yielded) or st.terminal is not None)
+            with self._client._cond:
+                # dict insertion order == completion order.
+                pairs = [(k, row) for k, row in st.rows.items()
+                         if k not in yielded]
+                terminal, message = st.terminal, st.message
+            for k, row in pairs:
+                yield (k, row)
+                yielded.add(k)
+            if terminal is not None and not pairs:
+                if terminal == "error":
+                    raise ServiceError(message)
+                return
+
+    def collect(self) -> list:
+        """All rows, in row-index order (rate order / policy-major
+        order).  Blocks until the job is done; raises on error or
+        cancellation."""
+        st = self._state
+        self._client._wait(lambda: st.terminal is not None)
+        if st.terminal == "error":
+            raise ServiceError(st.message)
+        if st.terminal == "cancelled":
+            raise ServiceError("job was cancelled")
+        return [st.rows[i] for i in range(st.accepted["rows_total"])]
+
+    def sweep_points(self) -> list:
+        """Rows rebuilt as :class:`SweepPoint` dataclasses (rate order),
+        field-identical to a direct ``saturation_sweep`` call."""
+        from repro.core.noc.traffic.sweep import SweepPoint
+
+        return [SweepPoint(**row) for row in self.collect()]
+
+    def policy_sweeps(self, knee: float = 3.0) -> list:
+        """A policy-compare job's rows regrouped into
+        :class:`PolicySweep` rows, identical to ``compare_policies``."""
+        from repro.core.noc.traffic.sweep import (
+            PolicySweep,
+            SweepPoint,
+            saturation_rate,
+        )
+
+        rows = self.collect()
+        out = []
+        for g in self._state.accepted["groups"]:
+            pts = tuple(SweepPoint(**row)
+                        for row in rows[g["start"]:g["start"] + g["count"]])
+            out.append(PolicySweep(
+                policy=g["meta"]["policy"], num_vcs=g["meta"]["num_vcs"],
+                points=pts, saturation=saturation_rate(pts, knee=knee)))
+        return out
+
+    def result(self) -> dict:
+        """A run-program job's single result row (makespan, phase_end,
+        per-op [id, inject, done] cycles)."""
+        return self.collect()[0]
+
+    def cancel(self) -> None:
+        self._client._send({"op": "cancel", "req": self._state.req})
+
+    def wait(self, timeout: Optional[float] = None) -> str:
+        """Block until terminal; returns ``"done"`` / ``"cancelled"`` /
+        ``"error"``."""
+        self._client._wait(lambda: self._state.terminal is not None,
+                           timeout=timeout)
+        if self._state.terminal is None:
+            raise TimeoutError(f"job {self._state.req} still running")
+        return self._state.terminal
+
+
+class ServiceClient:
+    """One connection to a :class:`SimulationServer` socket."""
+
+    def __init__(self, path: str, timeout: float = 300.0):
+        self.timeout = timeout
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.connect(path)
+        self._wlock = threading.Lock()
+        self._cond = threading.Condition()
+        self._jobs: dict[str, _JobState] = {}
+        self._stats: dict[str, dict] = {}
+        self._seq = 0
+        self._closed = False
+        self._reader = threading.Thread(
+            target=self._read_loop, name="service-client", daemon=True)
+        self._reader.start()
+
+    # -- submissions -------------------------------------------------------
+
+    def submit_job(self, doc: dict) -> JobHandle:
+        """Submit a raw job document (see :mod:`~.jobs`)."""
+        with self._cond:
+            self._seq += 1
+            req = f"r{self._seq}"
+            state = _JobState(req)
+            self._jobs[req] = state
+        self._send({"op": "submit", "req": req, "job": doc})
+        return JobHandle(self, state)
+
+    def submit_sweep(self, **kw) -> JobHandle:
+        """Submit a saturation sweep (``SweepJob`` fields as kwargs)."""
+        return self.submit_job(SweepJob(**kw).to_doc())
+
+    def submit_policy_compare(self, **kw) -> JobHandle:
+        """Submit a (policy x VC) comparison (``PolicyCompareJob``
+        fields as kwargs)."""
+        return self.submit_job(PolicyCompareJob(**kw).to_doc())
+
+    def submit_program(self, prog, **kw) -> JobHandle:
+        """Submit a program execution: ``prog`` is a live
+        :class:`~repro.core.noc.program.Program` (``RunProgramJob``
+        fields as kwargs)."""
+        return self.submit_job(RunProgramJob.of(prog, **kw).to_doc())
+
+    def stats(self) -> dict:
+        """The scheduler's point-exact service counters."""
+        with self._cond:
+            self._seq += 1
+            req = f"r{self._seq}"
+        self._send({"op": "stats", "req": req})
+        self._wait(lambda: req in self._stats)
+        with self._cond:
+            return self._stats.pop(req)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._reader.join(timeout=5)
+        with self._cond:
+            self._cond.notify_all()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- wire --------------------------------------------------------------
+
+    def _send(self, doc: dict) -> None:
+        if self._closed:
+            raise ServiceError("client is closed")
+        with self._wlock:
+            self._sock.sendall((json.dumps(doc) + "\n").encode())
+
+    def _wait(self, predicate, timeout: Optional[float] = None) -> None:
+        deadline = timeout if timeout is not None else self.timeout
+        with self._cond:
+            if not self._cond.wait_for(
+                    lambda: predicate() or self._closed, timeout=deadline):
+                raise TimeoutError(
+                    f"service reply not received within {deadline:g}s")
+            if self._closed and not predicate():
+                raise ServiceError("connection closed while waiting")
+
+    def _read_loop(self) -> None:
+        buf = b""
+        while True:
+            try:
+                data = self._sock.recv(65536)
+            except OSError:
+                data = b""
+            if not data:
+                break
+            buf += data
+            while b"\n" in buf:
+                line, buf = buf.split(b"\n", 1)
+                if line.strip():
+                    self._dispatch(json.loads(line))
+        with self._cond:
+            self._closed = True
+            for st in self._jobs.values():
+                if st.terminal is None:
+                    st.terminal = "error"
+                    st.message = "connection closed"
+            self._cond.notify_all()
+
+    def _dispatch(self, msg: dict) -> None:
+        event = msg.get("event")
+        req = msg.get("req")
+        with self._cond:
+            if event == "stats":
+                self._stats[req] = msg["stats"]
+                self._cond.notify_all()
+                return
+            st = self._jobs.get(req)
+            if st is None:
+                if event == "error":   # rejection of an unknown/bad req
+                    pass
+                self._cond.notify_all()
+                return
+            if event == "accepted":
+                st.accepted = msg
+            elif event == "rows":
+                for idx, row in msg["rows"]:
+                    st.rows[idx] = row
+            elif event in ("done", "cancelled"):
+                st.terminal = event
+            elif event == "error":
+                st.terminal = "error"
+                st.message = msg.get("message", "service error")
+            elif event == "cancel_noop":
+                pass
+            self._cond.notify_all()

@@ -1,0 +1,232 @@
+"""Local-socket front end of the simulation service.
+
+:class:`SimulationServer` listens on an ``AF_UNIX`` socket and speaks a
+line-delimited JSON protocol — one JSON document per ``\\n``-terminated
+line, both directions.  Requests:
+
+``{"op": "submit", "req": <id>, "job": <job doc>}``
+    Parse and enqueue a job (:func:`~.jobs.job_from_doc` documents).
+    Replies stream asynchronously, all tagged with the request id:
+    ``{"event": "accepted", "req": ..., "job": ..., "rows_total": ...,
+    "groups": [...]}`` first, then any number of ``{"event": "rows",
+    "rows": [[index, row], ...]}`` as chunks complete (rows arrive in
+    completion order; indices place them), then exactly one terminal
+    ``done`` / ``cancelled`` / ``error`` event.
+``{"op": "cancel", "req": <id of the submit>}``
+    Cancel that job; idempotent.
+``{"op": "stats", "req": <id>}``
+    One ``{"event": "stats", "req": ..., "stats": {...}}`` reply with
+    the scheduler's point-exact counters.
+
+Concurrency: every connection gets a reader thread; events are written
+under a per-connection lock (scheduler callbacks and reader replies
+interleave safely).  A client disconnect cancels all of its live jobs —
+queued points nobody else wants are dropped before they cost a slot.
+
+Rows are bit-identical to the direct APIs end to end: JSON float
+serialization round-trips exactly (``repr``-based), so the
+``SweepPoint`` a client rebuilds equals the one ``saturation_sweep``
+returns, field for field.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import tempfile
+import threading
+from typing import Optional
+
+from repro.core.noc.service.scheduler import Scheduler
+
+
+class SimulationServer:
+    """Persistent simulation service on a local socket.
+
+    Owns a :class:`~.scheduler.Scheduler` (created from the constructor
+    knobs unless an existing one is passed) and serves until
+    :meth:`close`.  Use as a context manager; ``path`` defaults to a
+    fresh socket in a private temp directory.
+    """
+
+    def __init__(self, path: Optional[str] = None, workers=None,
+                 chunk_tokens: int = 8, scheduler: Optional[Scheduler] = None,
+                 telemetry=None, backlog: int = 16):
+        self._tmpdir = None
+        if path is None:
+            self._tmpdir = tempfile.mkdtemp(prefix="repro-noc-service-")
+            path = os.path.join(self._tmpdir, "service.sock")
+        self.path = path
+        self.scheduler = scheduler or Scheduler(
+            workers=workers, chunk_tokens=chunk_tokens, telemetry=telemetry)
+        self._owns_scheduler = scheduler is None
+        self._lock = threading.Lock()
+        self._conns: set = set()
+        self._closed = False
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.bind(path)
+        self._sock.listen(backlog)
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="service-accept", daemon=True)
+        self._accept_thread.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for conn in conns:
+            conn.shutdown()
+        self._accept_thread.join(timeout=5)
+        if self._owns_scheduler:
+            self.scheduler.close()
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+        if self._tmpdir is not None:
+            try:
+                os.rmdir(self._tmpdir)
+            except OSError:
+                pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- accept / per-connection machinery ---------------------------------
+
+    def _accept_loop(self) -> None:
+        n = 0
+        while not self._closed:
+            try:
+                sock, _ = self._sock.accept()
+            except OSError:
+                break
+            n += 1
+            conn = _Connection(self, sock, name=f"client{n}")
+            with self._lock:
+                self._conns.add(conn)
+            conn.start()
+
+    def _drop(self, conn: "_Connection") -> None:
+        with self._lock:
+            self._conns.discard(conn)
+
+
+class _Connection:
+    """One client connection: a reader thread plus a write lock."""
+
+    def __init__(self, server: SimulationServer, sock, name: str):
+        self.server = server
+        self.sock = sock
+        self.name = name
+        self._wlock = threading.Lock()
+        self._jobs: dict[str, str] = {}   # req id -> scheduler job id
+        self._dead = False
+        self._thread = threading.Thread(
+            target=self._read_loop, name=f"service-{name}", daemon=True)
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def shutdown(self) -> None:
+        self._dead = True
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    # -- wire --------------------------------------------------------------
+
+    def send(self, doc: dict) -> None:
+        if self._dead:
+            return
+        data = (json.dumps(doc) + "\n").encode()
+        try:
+            with self._wlock:
+                self.sock.sendall(data)
+        except OSError:
+            self._dead = True
+
+    def _read_loop(self) -> None:
+        buf = b""
+        try:
+            while not self._dead:
+                try:
+                    data = self.sock.recv(65536)
+                except OSError:
+                    break
+                if not data:
+                    break
+                buf += data
+                while b"\n" in buf:
+                    line, buf = buf.split(b"\n", 1)
+                    if line.strip():
+                        self._handle_line(line)
+        finally:
+            self._dead = True
+            # A vanished client must not hold slots or queue depth:
+            # cancel everything it still has live.
+            for job_id in list(self._jobs.values()):
+                self.server.scheduler.cancel(job_id)
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            self.server._drop(self)
+
+    def _handle_line(self, line: bytes) -> None:
+        try:
+            msg = json.loads(line)
+            op = msg.get("op")
+            req = msg.get("req")
+        except (json.JSONDecodeError, AttributeError):
+            self.send({"event": "error", "req": None,
+                       "message": "malformed request line"})
+            return
+        if op == "submit":
+            self._handle_submit(req, msg.get("job"))
+        elif op == "cancel":
+            job_id = self._jobs.get(req)
+            cancelled = (self.server.scheduler.cancel(job_id)
+                         if job_id is not None else False)
+            if not cancelled:
+                # Already terminal (or unknown): reply so the client
+                # never waits on a cancel of a finished job.
+                self.send({"event": "cancel_noop", "req": req})
+        elif op == "stats":
+            self.send({"event": "stats", "req": req,
+                       "stats": self.server.scheduler.stats()})
+        else:
+            self.send({"event": "error", "req": req,
+                       "message": f"unknown op {op!r}"})
+
+    def _handle_submit(self, req, job_doc) -> None:
+        def on_event(event: dict) -> None:
+            out = dict(event)
+            out["req"] = req
+            self.send(out)
+
+        try:
+            job_id = self.server.scheduler.submit(
+                self.name, job_doc, on_event)
+        except (ValueError, TypeError, KeyError) as exc:
+            self.send({"event": "error", "req": req,
+                       "message": f"rejected: {exc}"})
+            return
+        self._jobs[req] = job_id

@@ -68,6 +68,11 @@ class Collector:
         self.tile_eject: dict = {}     # Coord -> beats delivered at tile
         self.annotations: list = []    # (cycle, kind, detail) instants
         self.ops: list = []            # (label, lane, start, end) op spans
+        # (name, t, value) counter samples — service-level gauges (queue
+        # depth, slot occupancy, cache hit rate).  Deliberately NOT part
+        # of state_dict(): checkpoints predate this field and their
+        # payload bytes (hence fingerprints) must stay stable.
+        self.counter_samples: list = []
         self._sim = None
         self._faults = None
         self._flaky_memo: dict = {}
@@ -195,6 +200,11 @@ class Collector:
         """Record an instantaneous event (fault arrival, re-lowering) on
         the timeline."""
         self.annotations.append((int(cycle), str(kind), str(detail)))
+
+    def sample_counter(self, name: str, t: float, value: float) -> None:
+        """Record one sample of a named gauge (exported as a Perfetto
+        counter track)."""
+        self.counter_samples.append((str(name), float(t), float(value)))
 
     def record_program(self, res) -> None:
         """Record per-op lifecycle spans from a

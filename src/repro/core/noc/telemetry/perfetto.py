@@ -62,6 +62,14 @@ def trace_events(collector) -> list[dict]:
                 "ph": "C", "pid": _PID, "tid": 0, "name": counter,
                 "ts": ts, "args": {counter: sample[counter]},
             })
+    # Service-level gauges (queue depth, slot occupancy, cache hit rate)
+    # sampled by the simulation service scheduler; getattr so collectors
+    # restored from pre-service checkpoints export unchanged.
+    for name, t, value in getattr(collector, "counter_samples", ()):
+        events.append({
+            "ph": "C", "pid": _PID, "tid": 0, "name": name,
+            "ts": float(t), "args": {name: value},
+        })
     events.sort(key=lambda e: e["ts"])
     return meta + events
 

@@ -18,7 +18,6 @@ packets per node.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 import math
 import os
@@ -163,30 +162,49 @@ def _sweep_chunk(args: tuple) -> list[SweepPoint]:
 JOURNAL_KIND = "repro-sweep-journal"
 JOURNAL_VERSION = 1
 
+# Human-readable label per sweep-key component (the order diagnostics
+# list them in).
+_KEY_COMPONENTS = (
+    ("mesh", "mesh"),
+    ("params", "params"),
+    ("engine", "engine"),
+    ("compile_once", "compile_once"),
+    ("cfgs", "config list (pattern/rates/seed/payload)"),
+)
+
 
 def _journal_key(mesh, cfgs, params, engine, compile_once) -> str:
     """Identity of one sweep invocation: sha256 over everything that
     changes its results.  A journal written under a different key must
-    not be resumed from — mixed points would be silent garbage."""
-    p = params or NoCParams()
-    d = dataclasses.asdict(p)
-    d.pop("faults", None)
-    d["faults"] = p.faults.to_dict() if getattr(p, "faults", None) else None
-    doc = {
-        "mesh": [mesh.cols, mesh.rows],
-        "cfgs": [dataclasses.asdict(c) for c in cfgs],
-        "params": d,
-        "engine": engine,
-        "compile_once": bool(compile_once),
-    }
-    blob = json.dumps(doc, sort_keys=True, default=str).encode()
-    return hashlib.sha256(blob).hexdigest()
+    not be resumed from — mixed points would be silent garbage.
+    (Delegates to the shared canonical-fingerprint module; the key bytes
+    are unchanged, so committed journals stay resumable.)"""
+    from repro.core.noc.fingerprint import sweep_key
+
+    return sweep_key(mesh, cfgs, params, engine, compile_once)
 
 
-def _journal_load(path: str, key: str) -> dict[float, SweepPoint]:
+def _mismatch_detail(header: dict, parts: Optional[dict]) -> str:
+    """Name which component(s) of the sweep key differ from the journal
+    header, when the header carries per-component digests (journals
+    written before those were recorded fall back to the bare hashes)."""
+    theirs = header.get("parts")
+    if not isinstance(theirs, dict) or parts is None:
+        return ("the journal header predates per-component digests, so "
+                "the differing component cannot be named")
+    differing = [label for comp, label in _KEY_COMPONENTS
+                 if theirs.get(comp) != parts.get(comp)]
+    if not differing:
+        return "per-component digests unexpectedly agree"
+    return "differing component(s): " + ", ".join(differing)
+
+
+def _journal_load(path: str, key: str,
+                  parts: Optional[dict] = None) -> dict[float, SweepPoint]:
     """Completed points of a resumable journal (empty if none).  Raises
-    ``ValueError`` on a key mismatch; a truncated trailing line (crash
-    mid-append) is ignored."""
+    ``ValueError`` on a key mismatch — naming the differing key
+    component when the header allows it; a truncated trailing line
+    (crash mid-append) is ignored."""
     if not os.path.exists(path):
         return {}
     with open(path) as f:
@@ -200,7 +218,8 @@ def _journal_load(path: str, key: str) -> dict[float, SweepPoint]:
         raise ValueError(
             f"sweep journal {path} was written by a different sweep "
             f"configuration (key {header.get('key', '')[:16]}... vs "
-            f"{key[:16]}...); delete it or pass a different journal path")
+            f"{key[:16]}...; {_mismatch_detail(header, parts)}); "
+            f"delete it or pass a different journal path")
     out: dict[float, SweepPoint] = {}
     for line in lines[1:]:
         try:
@@ -277,13 +296,17 @@ def saturation_sweep(
     ]
     done: dict[float, SweepPoint] = {}
     if journal is not None:
+        from repro.core.noc.fingerprint import sweep_key_parts
+
         key = _journal_key(mesh, cfgs, params, engine, compile_once)
-        done = _journal_load(journal, key)
+        parts = sweep_key_parts(mesh, cfgs, params, engine, compile_once)
+        done = _journal_load(journal, key, parts)
         if not os.path.exists(journal) or os.path.getsize(journal) == 0:
             with open(journal, "w") as f:
                 f.write(json.dumps({"kind": JOURNAL_KIND,
                                     "version": JOURNAL_VERSION,
-                                    "key": key}) + "\n")
+                                    "key": key,
+                                    "parts": parts}) + "\n")
         elif done:
             warnings.warn(
                 f"saturation_sweep: resuming from journal {journal} — "

@@ -1,0 +1,508 @@
+"""Simulation service: canonical fingerprints, compile/result caches,
+the supervised scheduler, and the socket server/client stack.
+
+The load-bearing invariants:
+
+* the shared fingerprint module reproduces the *exact historical bytes*
+  of the sweep-journal key and the checkpoint fingerprint (frozen
+  copies of the legacy implementations live here as oracles);
+* every row a client receives — memoized, coalesced, fanned out, or
+  computed after a worker SIGKILL — is bit-identical to calling
+  ``saturation_sweep`` / ``compare_policies`` / ``run_program``
+  directly;
+* the point accounting is exact:
+  ``memo hits + in-flight joins + computed == points total``, always.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+
+import pytest
+
+from repro.core.noc import fingerprint as fp
+from repro.core.noc.params import NoCParams
+from repro.core.noc.program import ProgramBuilder, run_program
+from repro.core.noc.service import (
+    CompileCache,
+    PolicyCompareJob,
+    ResultMemo,
+    RunProgramJob,
+    ServiceClient,
+    ServiceError,
+    SimulationServer,
+    SweepJob,
+    execute_workload,
+    job_from_doc,
+)
+from repro.core.noc.service.scheduler import Scheduler
+from repro.core.noc.traffic.patterns import SyntheticConfig
+from repro.core.noc.traffic.sweep import (
+    compare_policies,
+    saturation_sweep,
+)
+from repro.core.topology import Mesh2D
+
+
+# ---------------------------------------------------------------------------
+# Satellite: canonical fingerprint module round-trips the legacy bytes.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_journal_key(mesh, cfgs, params, engine, compile_once) -> str:
+    """Frozen copy of the pre-refactor ``traffic.sweep._journal_key`` —
+    the oracle proving committed journals stay resumable."""
+    p = params or NoCParams()
+    d = dataclasses.asdict(p)
+    d.pop("faults", None)
+    d["faults"] = p.faults.to_dict() if getattr(p, "faults", None) else None
+    doc = {
+        "mesh": [mesh.cols, mesh.rows],
+        "cfgs": [dataclasses.asdict(c) for c in cfgs],
+        "params": d,
+        "engine": engine,
+        "compile_once": bool(compile_once),
+    }
+    blob = json.dumps(doc, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _legacy_checkpoint_canonical(payload: dict) -> bytes:
+    """Frozen copy of the pre-refactor ``checkpoint._canonical``."""
+    return json.dumps(payload, sort_keys=True,
+                      separators=(",", ":")).encode()
+
+
+def test_sweep_key_matches_legacy_bytes():
+    mesh = Mesh2D(6, 4)
+    cfgs = [SyntheticConfig(pattern="hotspot", rate=r, nbytes=128,
+                            packets_per_node=3, seed=11, hotspot=(2, 1),
+                            hotspot_frac=0.7)
+            for r in (0.02, 0.05)]
+    for params in (None, NoCParams(routing="oddeven", num_vcs=2)):
+        for engine, once in (("heap", True), ("event", False)):
+            assert fp.sweep_key(mesh, cfgs, params, engine, once) == \
+                _legacy_journal_key(mesh, cfgs, params, engine, once)
+
+
+def test_sweep_key_via_sweep_module_delegation():
+    from repro.core.noc.traffic.sweep import _journal_key
+
+    mesh = Mesh2D(4, 4)
+    cfgs = [SyntheticConfig(pattern="uniform", rate=0.1)]
+    assert _journal_key(mesh, cfgs, None, "heap", True) == \
+        _legacy_journal_key(mesh, cfgs, None, "heap", True)
+
+
+def test_checkpoint_fingerprint_matches_legacy_bytes():
+    payload = {"format": "repro-noc-checkpoint", "version": 1, "cycle": 7,
+               "mesh": [4, 4], "nested": {"b": [1, 2], "a": None}}
+    assert fp.checkpoint_fingerprint(payload) == hashlib.sha256(
+        _legacy_checkpoint_canonical(payload)).hexdigest()
+    assert fp.canonical_json(payload, compact=True) == \
+        _legacy_checkpoint_canonical(payload)
+
+
+def test_checkpoint_snapshot_round_trip_still_validates():
+    from repro.core.noc.netsim import NoCSim
+    from repro.core.noc.resilience import Snapshot, checkpoint, restore
+    from repro.core.topology import Coord
+
+    sim = NoCSim(Mesh2D(4, 4))
+    sim.add_unicast(Coord(0, 0), Coord(3, 3), 256)
+    sim.run(stop_at=5)
+    snap = checkpoint(sim, 5)
+    again = Snapshot.from_json(snap.to_json())
+    assert again.fingerprint == snap.fingerprint
+    restore(again)  # must not raise
+
+
+def test_journal_mismatch_names_differing_component(tmp_path):
+    mesh = Mesh2D(4, 4)
+    journal = str(tmp_path / "sweep.jsonl")
+    saturation_sweep(mesh, "uniform", [0.05], packets_per_node=2, seed=0,
+                     journal=journal)
+    # Same everything but the engine: the error must say so.
+    with pytest.raises(ValueError, match="different sweep configuration"):
+        saturation_sweep(mesh, "uniform", [0.05], packets_per_node=2,
+                         seed=0, engine="event", journal=journal)
+    with pytest.raises(ValueError, match=r"differing component\(s\): engine"):
+        saturation_sweep(mesh, "uniform", [0.05], packets_per_node=2,
+                         seed=0, engine="event", journal=journal)
+    # Different mesh AND configs: both named.
+    with pytest.raises(ValueError, match="mesh.*config list"):
+        saturation_sweep(Mesh2D(8, 8), "uniform", [0.07], journal=journal)
+
+
+def test_journal_mismatch_without_parts_header_degrades(tmp_path):
+    """Journals written before per-component digests still refuse with
+    the generic message (no crash on the missing header field)."""
+    mesh = Mesh2D(4, 4)
+    journal = str(tmp_path / "old.jsonl")
+    with open(journal, "w") as f:
+        f.write(json.dumps({"kind": "repro-sweep-journal", "version": 1,
+                            "key": "0" * 64}) + "\n")
+    with pytest.raises(ValueError, match="predates per-component digests"):
+        saturation_sweep(mesh, "uniform", [0.05], journal=journal)
+
+
+def test_workload_fingerprint_on_compiled_workload():
+    from repro.core.noc.program import compile_workload
+
+    b = ProgramBuilder(Mesh2D(4, 4))
+    b.unicast((0, 0), (3, 3), 1024)
+    prog = b.build()
+    cw = compile_workload(prog)
+    assert cw.fingerprint() == fp.workload_fingerprint(prog, cw.p)
+    assert cw.fingerprint("heap") != cw.fingerprint("event")
+
+
+# ---------------------------------------------------------------------------
+# Caches.
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_lru_eviction_and_stats():
+    cache = CompileCache(capacity=2)
+    built = []
+    for key in ("a", "b", "a", "c", "b"):
+        cache.get(key, lambda k=key: built.append(k) or k.upper())
+    # a,b built; a hit; c builds evicting LRU (b); b rebuilds evicting a.
+    assert built == ["a", "b", "c", "b"]
+    assert cache.stats.as_tuple() == (1, 4, 2)
+    assert "b" in cache and "a" not in cache
+
+
+def test_result_memo_eviction_order():
+    memo = ResultMemo(capacity=2)
+    memo.put("x", 1)
+    memo.put("y", 2)
+    assert memo.get("x") == 1      # refreshes x
+    memo.put("z", 3)               # evicts y
+    assert memo.get("y") is None
+    assert memo.get("x") == 1 and memo.get("z") == 3
+    assert memo.stats.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# Job specs and the shared execution path.
+# ---------------------------------------------------------------------------
+
+
+def test_job_doc_round_trip_preserves_fingerprint():
+    job = SweepJob(mesh=(6, 4), pattern="hotspot", rates=(0.02, 0.05),
+                   seed=3, hotspot=(2, 1), hotspot_frac=0.8,
+                   params=NoCParams(routing="yx", num_vcs=2))
+    again = job_from_doc(json.loads(json.dumps(job.to_doc())))
+    assert again.fingerprint() == job.fingerprint()
+    assert again.workloads()[0].fingerprint == job.workloads()[0].fingerprint
+
+
+def test_job_validation_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown job kind"):
+        job_from_doc({"kind": "nope"})
+    with pytest.raises(ValueError, match="unknown pattern"):
+        SweepJob(mesh=(4, 4), pattern="bogus", rates=(0.1,))
+    with pytest.raises(ValueError, match="at least one rate"):
+        SweepJob(mesh=(4, 4), pattern="uniform", rates=())
+
+
+def test_execute_workload_matches_direct_sweep():
+    mesh = Mesh2D(4, 4)
+    rates = (0.02, 0.06, 0.1)
+    direct = saturation_sweep(mesh, "transpose", rates,
+                              packets_per_node=2, seed=3)
+    [wl] = SweepJob(mesh=(4, 4), pattern="transpose", rates=rates,
+                    packets_per_node=2, seed=3).workloads()
+    rows = execute_workload(json.loads(json.dumps(wl.doc)), wl.tokens,
+                            CompileCache())
+    assert rows == [dataclasses.asdict(p) for p in direct]
+
+
+def test_execute_workload_matches_direct_program():
+    b = ProgramBuilder(Mesh2D(4, 4))
+    b.unicast((0, 0), (3, 3), 4096)
+    b.barrier()
+    b.reduction([(0, 0), (3, 0)], (3, 3), 1024)
+    prog = b.build()
+    res = run_program(prog, None, mode="op")
+    [wl] = RunProgramJob.of(prog, mode="op").workloads()
+    [row] = execute_workload(json.loads(json.dumps(wl.doc)), wl.tokens,
+                             CompileCache())
+    assert row["makespan"] == res.makespan
+    assert row["phase_end"] == list(res.phase_end)
+    assert row["runs"] == [[r.op.id, r.inject_cycle, r.done_cycle]
+                           for r in res.runs]
+
+
+def test_policy_compare_row_order_matches_compare_policies():
+    job = PolicyCompareJob(mesh=(4, 4), pattern="transpose",
+                           rates=(0.02, 0.08), policies=("xy", "yx"),
+                           vcs=(1, 2), packets_per_node=2, seed=4)
+    metas = [w.meta for w in job.workloads()]
+    assert metas == [{"policy": "xy", "num_vcs": 1},
+                     {"policy": "xy", "num_vcs": 2},
+                     {"policy": "yx", "num_vcs": 1},
+                     {"policy": "yx", "num_vcs": 2}]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: coalescing, accounting, fairness (in-process mode: the
+# behaviors under test are engine-independent of the worker pool).
+# ---------------------------------------------------------------------------
+
+
+def _sweep_doc(**kw):
+    base = dict(mesh=(4, 4), pattern="transpose", rates=(0.03, 0.07),
+                packets_per_node=2, seed=5)
+    base.update(kw)
+    return SweepJob(**base).to_doc()
+
+
+def _collect_events():
+    events = []
+    lock = threading.Lock()
+
+    def on_event(e):
+        with lock:
+            events.append(e)
+    return events, on_event
+
+
+def test_scheduler_exact_point_accounting():
+    with Scheduler(workers=0) as sched:
+        ev1, cb1 = _collect_events()
+        sched.submit("a", _sweep_doc(), cb1)
+        _wait_done(ev1)
+        # Identical resubmission: all memo hits, served synchronously.
+        ev2, cb2 = _collect_events()
+        sched.submit("b", _sweep_doc(), cb2)
+        assert ev2[-1]["event"] == "done"
+        st = sched.stats()
+        assert st["points"]["total"] == 4
+        assert st["points"]["computed"] == 2
+        assert st["points"]["memo_hits"] == 2
+        assert st["points"]["inflight_joins"] == 0
+        assert (st["points"]["memo_hits"] + st["points"]["inflight_joins"]
+                + st["points"]["computed"]) == st["points"]["total"]
+        assert st["points"]["hit_rate"] == 0.5
+
+
+def _wait_done(events, timeout=120.0):
+    import time
+
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if any(e["event"] in ("done", "cancelled", "error")
+               for e in events):
+            return
+        time.sleep(0.01)
+    raise TimeoutError(f"no terminal event in {events}")
+
+
+def test_scheduler_deterministic_error_surfaces_as_error_event():
+    with Scheduler(workers=0) as sched:
+        ev, cb = _collect_events()
+        doc = _sweep_doc()
+        doc["mesh"] = [0, 0]           # lowering will fail
+        sched.submit("a", doc, cb)
+        _wait_done(ev)
+        terminal = [e for e in ev if e["event"] == "error"]
+        assert terminal and "message" in terminal[0]
+        assert sched.stats()["jobs"]["failed"] == 1
+
+
+def test_scheduler_rejects_malformed_doc_without_enqueueing():
+    with Scheduler(workers=0) as sched:
+        with pytest.raises(ValueError):
+            sched.submit("a", {"kind": "nope"}, lambda e: None)
+        assert sched.stats()["jobs"]["submitted"] == 0
+        assert sched.stats()["points"]["total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: server + concurrent clients, bit-identity and hit rate.
+# ---------------------------------------------------------------------------
+
+
+GRID = dict(mesh=(4, 4), pattern="transpose",
+            rates=[0.02, 0.04, 0.06, 0.08, 0.1, 0.12],
+            packets_per_node=2, seed=7)
+
+
+def test_three_concurrent_clients_bit_identical_and_hit_rate():
+    direct = saturation_sweep(Mesh2D(4, 4), "transpose", GRID["rates"],
+                              packets_per_node=2, seed=7)
+    with SimulationServer(workers=2, chunk_tokens=3) as srv:
+        results: dict[str, list] = {}
+        errors: list = []
+
+        def run(name):
+            try:
+                with ServiceClient(srv.path) as cli:
+                    results[name] = cli.submit_sweep(**GRID).sweep_points()
+            except Exception as exc:  # noqa: BLE001
+                errors.append((name, exc))
+
+        threads = [threading.Thread(target=run, args=(f"c{i}",))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        assert len(results) == 3
+        for name, pts in results.items():
+            assert pts == direct, f"client {name} rows differ from direct"
+
+        with ServiceClient(srv.path) as cli:
+            st = cli.stats()
+    pts_st = st["points"]
+    assert pts_st["total"] == 18
+    assert pts_st["computed"] == 6           # one client's worth, once
+    assert (pts_st["memo_hits"] + pts_st["inflight_joins"]) == 12
+    assert pts_st["hit_rate"] > 0.5          # 12/18 by construction
+    assert (pts_st["memo_hits"] + pts_st["inflight_joins"]
+            + pts_st["computed"]) == pts_st["total"]
+
+
+def test_streamed_rows_arrive_before_done_and_reassemble():
+    with SimulationServer(workers=2, chunk_tokens=1) as srv:
+        with ServiceClient(srv.path) as cli:
+            h = cli.submit_sweep(**GRID)
+            seen = list(h.iter_rows())
+            assert sorted(k for k, _ in seen) == list(range(6))
+            direct = saturation_sweep(Mesh2D(4, 4), "transpose",
+                                      GRID["rates"], packets_per_node=2,
+                                      seed=7)
+            assert h.sweep_points() == direct
+
+
+def test_policy_compare_over_wire_matches_direct():
+    kw = dict(pattern="transpose", rates=[0.02, 0.08],
+              policies=("xy", "yx"), vcs=(1,), packets_per_node=2, seed=4)
+    direct = compare_policies(Mesh2D(4, 4), **kw)
+    with SimulationServer(workers=2) as srv:
+        with ServiceClient(srv.path) as cli:
+            rows = cli.submit_policy_compare(mesh=(4, 4), **kw).policy_sweeps()
+    assert rows == direct
+
+
+def test_program_job_over_wire_matches_direct():
+    b = ProgramBuilder(Mesh2D(4, 4))
+    b.unicast((0, 0), (3, 3), 4096)
+    b.barrier()
+    b.reduction([(0, 0), (3, 0)], (3, 3), 1024)
+    prog = b.build()
+    res = run_program(prog, None, mode="op")
+    with SimulationServer(workers=0) as srv:
+        with ServiceClient(srv.path) as cli:
+            row = cli.submit_program(prog, mode="op").result()
+    assert row["makespan"] == res.makespan
+    assert row["runs"] == [[r.op.id, r.inject_cycle, r.done_cycle]
+                           for r in res.runs]
+
+
+def test_sigkilled_worker_chunk_retried_no_dup_no_missing():
+    direct = saturation_sweep(Mesh2D(4, 4), "uniform",
+                              [0.02, 0.04, 0.06, 0.08],
+                              packets_per_node=2, seed=9)
+    with SimulationServer(workers=2, chunk_tokens=2) as srv:
+        srv.scheduler.chaos_kill_after = 1    # SIGKILL holder of chunk #1
+        with ServiceClient(srv.path) as cli:
+            h = cli.submit_sweep(mesh=(4, 4), pattern="uniform",
+                                 rates=[0.02, 0.04, 0.06, 0.08],
+                                 packets_per_node=2, seed=9)
+            pts = h.sweep_points()
+            st = cli.stats()
+    assert pts == direct
+    assert st["worker_respawns"] >= 1
+    assert st["chunk_retries"] >= 1
+    # No duplicate computation of non-killed points, none missing:
+    assert st["points"]["computed"] == 4
+    assert st["points"]["total"] == 4
+
+
+def test_cancellation_frees_queued_points_and_slots():
+    with SimulationServer(workers=1, chunk_tokens=1) as srv:
+        with ServiceClient(srv.path) as a, ServiceClient(srv.path) as b:
+            big = a.submit_sweep(mesh=(8, 8), pattern="uniform",
+                                 rates=[0.01 + 0.005 * i for i in range(12)],
+                                 seed=1)
+            assert big.rows_total == 12
+            big.cancel()
+            assert big.wait(timeout=60) == "cancelled"
+            with pytest.raises(ServiceError, match="cancelled"):
+                big.collect()
+            # The slot is free for the next client immediately.
+            small = b.submit_sweep(mesh=(4, 4), pattern="transpose",
+                                   rates=[0.05], packets_per_node=2, seed=2)
+            assert small.wait(timeout=120) == "done"
+            st = b.stats()
+    assert st["jobs"]["cancelled"] == 1
+    assert st["jobs"]["done"] == 1
+    assert st["queue_depth"] == 0
+    # Dropped never-computed points are refunded from the accounting.
+    pts = st["points"]
+    assert (pts["memo_hits"] + pts["inflight_joins"]
+            + pts["computed"]) == pts["total"]
+
+
+def test_client_disconnect_cancels_its_jobs():
+    with SimulationServer(workers=1, chunk_tokens=1) as srv:
+        cli = ServiceClient(srv.path)
+        h = cli.submit_sweep(mesh=(8, 8), pattern="uniform",
+                             rates=[0.01 + 0.005 * i for i in range(10)],
+                             seed=6)
+        assert h.rows_total == 10
+        cli.close()                       # vanish mid-job
+        import time
+
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 60:
+            st = srv.scheduler.stats()
+            if (st["jobs"]["cancelled"] >= 1 and st["queue_depth"] == 0
+                    and st["slots_busy"] == 0):
+                break
+            time.sleep(0.05)
+        st = srv.scheduler.stats()
+        assert st["jobs"]["cancelled"] == 1
+        assert st["queue_depth"] == 0
+
+
+def test_in_process_degraded_mode_bit_identical():
+    direct = saturation_sweep(Mesh2D(4, 4), "transpose", [0.03, 0.06],
+                              packets_per_node=2, seed=5)
+    with SimulationServer(workers=0) as srv:
+        with ServiceClient(srv.path) as cli:
+            pts = cli.submit_sweep(mesh=(4, 4), pattern="transpose",
+                                   rates=[0.03, 0.06], packets_per_node=2,
+                                   seed=5).sweep_points()
+            st = cli.stats()
+    assert pts == direct
+    assert st["degraded"]
+
+
+def test_service_telemetry_spans_and_counters():
+    from repro.core.noc.telemetry import Collector
+    from repro.core.noc.telemetry.perfetto import trace_events
+
+    col = Collector()
+    with SimulationServer(workers=0, telemetry=col) as srv:
+        with ServiceClient(srv.path) as cli:
+            cli.submit_sweep(mesh=(4, 4), pattern="transpose",
+                             rates=[0.05], packets_per_node=2,
+                             seed=5).sweep_points()
+    ev = trace_events(col)
+    assert any(e.get("ph") == "X" and e["name"].startswith("job:")
+               for e in ev)
+    names = {e["name"] for e in ev if e.get("ph") == "C"}
+    assert {"service.queue_depth", "service.slots_busy",
+            "service.cache_hit_rate"} <= names
+    ts = [e["ts"] for e in ev if e["ph"] != "M"]
+    assert ts == sorted(ts)
+    # counter_samples stays out of checkpoint state: byte stability.
+    assert "counter_samples" not in col.state_dict()
