@@ -16,24 +16,38 @@ memory speed.  Rows in ``BENCH_service.json``:
 * ``concurrent_clients`` — one shared grid from 1 vs 3 concurrent
   clients: wall time, aggregate points/sec and the measured coalescing
   hit rate (deterministically 2/3 for 3 clients on a cold server).
+* ``restart_survival`` — the durability row: a server child is
+  SIGKILL'd after exactly 2 durably-stored points, restarted on the
+  same store, and a resuming client completes the grid — rows
+  bit-identical to the direct call, the 2 pre-kill points served as
+  store hits, zero duplicate compute.
 
 Run standalone as a CI gate::
 
     PYTHONPATH=src python -m benchmarks.bench_service --smoke
 
-The smoke additionally SIGKILLs a worker mid-chunk and requires the
-recovered run to stay bit-identical to the direct
-``saturation_sweep`` — the full resilience story in one gate.
+The smoke additionally SIGKILLs a worker mid-chunk (rows must stay
+bit-identical to the direct ``saturation_sweep``) and runs the
+restart-survival scenario end to end — the full resilience story,
+worker-level and server-level, in one gate.
 """
 
 from __future__ import annotations
 
 import json
+import os
+import shutil
+import signal
+import tempfile
 import threading
 import time
 from pathlib import Path
 
-from repro.core.noc.service import ServiceClient, SimulationServer
+from repro.core.noc.service import (
+    ServerProcess,
+    ServiceClient,
+    SimulationServer,
+)
 from repro.core.noc.traffic.sweep import saturation_sweep
 from repro.core.topology import Mesh2D
 
@@ -141,11 +155,71 @@ def _concurrent_clients() -> dict:
     }
 
 
+KILL_AFTER_POINTS = 2      # chunks == points at chunk_tokens=1
+
+
+def _restart_survival() -> dict:
+    """SIGKILL the server mid-stream, restart on the same store, let the
+    resuming client finish: bit-identity plus exact zero-duplicate
+    accounting (the ``KILL_AFTER_POINTS`` pre-kill points must return as
+    store hits, every other point computed exactly once)."""
+    direct = _direct_points()
+    n = len(GRID["rates"])
+    tmp = tempfile.mkdtemp(prefix="bench-service-restart-")
+    sock = os.path.join(tmp, "svc.sock")
+    store = os.path.join(tmp, "results.jsonl")
+    result: dict = {}
+    errors: list = []
+
+    def run_client() -> None:
+        try:
+            with ServiceClient(sock, resume=True, max_retries=60,
+                               backoff_base_s=0.05,
+                               backoff_cap_s=0.25) as cli:
+                h = cli.submit_sweep(**GRID)
+                result["pts"] = h.sweep_points()
+                result["stats"] = cli.stats()
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    t0 = time.perf_counter()
+    srv1 = ServerProcess(sock, store=store, workers=0, chunk_tokens=1,
+                         chaos_kill_server_after=KILL_AFTER_POINTS)
+    th = threading.Thread(target=run_client)
+    th.start()
+    exitcode = srv1.wait(timeout=300)           # the chaos SIGKILL
+    kill_at_s = time.perf_counter() - t0
+    with ServerProcess(sock, store=store, workers=0, chunk_tokens=1):
+        th.join(timeout=300)
+    wall = time.perf_counter() - t0
+    shutil.rmtree(tmp, ignore_errors=True)
+    if errors or "pts" not in result:
+        raise RuntimeError(f"restart-survival client failed: {errors!r}")
+    st = result["stats"]["points"]
+    return {
+        "grid_points": n,
+        "kill_after_points": KILL_AFTER_POINTS,
+        "server_exitcode": exitcode,
+        "killed_by_sigkill": exitcode == -signal.SIGKILL,
+        "kill_at_s": round(kill_at_s, 4),
+        "wall_s": round(wall, 4),
+        "rows_identical_to_direct": result["pts"] == direct,
+        "store_hits": st["store_hits"],
+        "computed_after_restart": st["computed"],
+        "zero_duplicate_compute": (
+            st["store_hits"] == KILL_AFTER_POINTS
+            and st["computed"] == n - KILL_AFTER_POINTS),
+        "accounting_exact": (st["memo_hits"] + st["inflight_joins"]
+                             + st["computed"]) == st["total"],
+    }
+
+
 def rows():
     results = {
         "warm_vs_cold": _warm_vs_cold(),
         "first_row_latency": _first_row_latency(),
         "concurrent_clients": _concurrent_clients(),
+        "restart_survival": _restart_survival(),
     }
     from benchmarks.run import provenance
 
@@ -154,6 +228,7 @@ def rows():
     wc = results["warm_vs_cold"]
     fr = results["first_row_latency"]
     cc = results["concurrent_clients"]
+    rs = results["restart_survival"]
     return [
         ("warm_vs_cold", wc["warm_s"] * 1e6,
          f"cold={wc['cold_points_per_s']}pts/s;"
@@ -165,6 +240,10 @@ def rows():
          f"solo={cc['solo_points_per_s']}pts/s;"
          f"x3={cc['multi_points_per_s']}pts/s;"
          f"hit_rate={cc['hit_rate']}"),
+        ("restart_survival", rs["wall_s"] * 1e6,
+         f"store_hits={rs['store_hits']};"
+         f"identical={rs['rows_identical_to_direct']};"
+         f"zero_dup={rs['zero_duplicate_compute']}"),
     ]
 
 
@@ -178,6 +257,9 @@ def smoke() -> int:
       bit-identical to the direct call, measured hit rate > 0.5.
     * A SIGKILLed worker's chunk is retried: rows still bit-identical,
       at least one respawn recorded.
+    * Restart survival: a SIGKILLed *server* restarted on its durable
+      store completes the resumed grid bit-identically, with the
+      pre-kill points served as store hits and zero duplicate compute.
     """
     wc = _warm_vs_cold()
     print(json.dumps(wc, indent=2))
@@ -216,11 +298,38 @@ def smoke() -> int:
         print(f"FAIL: chaos kill produced no respawn: {st}")
         return 1
 
+    rs = _restart_survival()
+    print(json.dumps(rs, indent=2))
+    if not rs["killed_by_sigkill"]:
+        print(f"FAIL: chaos server exited {rs['server_exitcode']}, "
+              f"not SIGKILL — the scenario did not run")
+        return 1
+    if not rs["rows_identical_to_direct"]:
+        print("FAIL: rows after server SIGKILL + restart differ from "
+              "the direct saturation_sweep")
+        return 1
+    if rs["store_hits"] < 1:
+        print("FAIL: restarted server served no store hits — the "
+              "durable store did not survive the kill")
+        return 1
+    if not rs["zero_duplicate_compute"]:
+        print(f"FAIL: duplicate compute across restart: "
+              f"store_hits={rs['store_hits']}, "
+              f"computed={rs['computed_after_restart']} "
+              f"(expected {rs['kill_after_points']} + "
+              f"{rs['grid_points'] - rs['kill_after_points']})")
+        return 1
+    if not rs["accounting_exact"]:
+        print("FAIL: point accounting not exact across restart")
+        return 1
+
     print(f"OK: warm x{wc['speedup_x']} >= x{WARM_SPEEDUP_FLOOR} "
           f"bit-identical; 3-client hit rate {hit_rate:.3f} > 0.5 "
           f"bit-identical; worker-kill recovery with "
           f"{st['worker_respawns']} respawn(s), "
-          f"{st['chunk_retries']} retried chunk(s)")
+          f"{st['chunk_retries']} retried chunk(s); server-kill restart "
+          f"survival with {rs['store_hits']} store hit(s), zero "
+          f"duplicate compute")
     return 0
 
 

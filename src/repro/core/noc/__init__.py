@@ -216,13 +216,25 @@
                                     (per-client fairness, in-flight
                                     point coalescing, kill/wedge
                                     recovery with chunk retry,
-                                    degradation to in-process)
-                ``service.server`` / ``service.client``  local-socket
-                                    JSONL protocol: concurrent clients,
-                                    streamed result rows, cancellation;
-                                    rows are bit-identical to calling
+                                    degradation to in-process, bounded
+                                    admission with retry-after,
+                                    graceful drain)
+                ``service.store``   crash-safe on-disk result store:
+                                    append-only torn-write-tolerant
+                                    JSONL memo, hydrated at server
+                                    start — restart (even ``kill -9``)
+                                    survival with zero recompute
+                ``service.server`` / ``service.client``  JSONL protocol
+                                    over AF_UNIX and token-
+                                    authenticated TCP: concurrent
+                                    clients, streamed result rows,
+                                    cancellation, SIGTERM drain, client
+                                    reconnect/backoff with idempotent
+                                    resubmission; rows are
+                                    bit-identical to calling
                                     ``saturation_sweep`` /
-                                    ``run_program`` directly
+                                    ``run_program`` directly, across
+                                    server restarts
 ``fingerprint`` — the one canonical sha256 module behind every
                 content-addressed key (sweep-journal keys, checkpoint
                 fingerprints, service workload/point identities), with

@@ -136,6 +136,38 @@ def checkpoint_fingerprint(payload: dict) -> str:
 
 
 # ---------------------------------------------------------------------------
+# Result-store schema identity (the durable memo's code-version key).
+# ---------------------------------------------------------------------------
+
+
+def store_schema_doc() -> dict:
+    """The code-version identity of durable result-store rows: the store
+    format, the point-key scheme, and the field sets whose shape the
+    stored keys and rows depend on (``NoCParams`` feeds the workload
+    fingerprints; ``SweepPoint`` is the row shape).  A store written
+    under a different document must be refused — its keys or rows are
+    not comparable to what the running code would produce."""
+    from repro.core.noc.params import NoCParams
+    from repro.core.noc.service.jobs import POINT_KEY_SCHEME
+    from repro.core.noc.traffic.sweep import SweepPoint
+
+    return {
+        "format": {"kind": "repro-noc-result-store", "version": 1},
+        "point_key": POINT_KEY_SCHEME,
+        "params_fields": [f.name for f in dataclasses.fields(NoCParams)],
+        "row_fields": [f.name for f in dataclasses.fields(SweepPoint)],
+    }
+
+
+def store_schema_parts() -> dict:
+    """Per-component digests of :func:`store_schema_doc`, written into
+    the store header so a mismatch can name *which* component differs
+    (mirroring the sweep-journal ``sweep_key_parts`` behavior)."""
+    return {k: digest(v, compact=True)
+            for k, v in store_schema_doc().items()}
+
+
+# ---------------------------------------------------------------------------
 # Program / compiled-workload identities (the service cache keys).
 # ---------------------------------------------------------------------------
 

@@ -261,6 +261,59 @@ def checkpoint(sim: NoCSim, cycle: int) -> Snapshot:
     return Snapshot(payload=payload, fingerprint=fp)
 
 
+def run_with_autocheckpoint(sim: NoCSim, path, interval: int,
+                            engine: str = "heap",
+                            max_cycles: int = 2_000_000):
+    """Run ``sim`` to completion with a periodic on-disk checkpoint, and
+    resume from ``path`` when a previous attempt left a snapshot there.
+
+    The run is segmented at ``interval``-cycle boundaries (the
+    pause/resume contract: each segment is
+    ``run(stop_at=t+interval, start_cycle=t)``); at every boundary the
+    paused state is snapshotted and written **atomically** (temp file +
+    rename, so a crash mid-write leaves the previous snapshot intact).
+    On entry, an existing snapshot at ``path`` is loaded, validated
+    (fingerprint) and resumed from — an interrupted long run restarts
+    from its last boundary instead of from zero.  The snapshot is
+    deleted once the run completes.
+
+    Returns ``(sim, makespan)`` — ``sim`` is the restored instance when
+    a snapshot was resumed (the caller's lowered sim is superseded).
+    The combined segmented run is bit-identical to an uninterrupted
+    ``sim.run(engine=...)`` (the PR 7 checkpoint guarantee), so
+    makespans and stream states are unchanged by checkpointing.  Pick
+    ``interval`` coarse relative to snapshot cost to bound the wall
+    overhead (``bench_resilience`` measures the overhead curve).
+    """
+    import os
+
+    if interval < 1:
+        raise ValueError(f"interval must be >= 1, got {interval}")
+    t = 0
+    if os.path.exists(path):
+        snap = Snapshot.load(path)
+        sim = restore(snap)
+        t = snap.cycle
+    while True:
+        stop = t + interval
+        r = sim.run(max_cycles=max_cycles, engine=engine,
+                    stop_at=stop, start_cycle=t)
+        if r < stop or all(s.done_cycle is not None for s in sim.streams):
+            break
+        t = stop
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            f.write(checkpoint(sim, t).to_json())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    try:
+        os.unlink(path)
+    except OSError:
+        pass
+    return sim, r
+
+
 def restore(snap: Snapshot) -> NoCSim:
     """Rebuild the paused sim from a snapshot.  Resume it with
     ``sim.run(start_cycle=snap.cycle, ...)`` (any engine); the combined

@@ -18,15 +18,24 @@ APIs into a long-lived local service that exploits that redundancy:
     Slot-based dispatch over persistent supervised fork workers:
     per-client fairness, in-flight point coalescing, worker
     kill/wedge recovery with chunk retry, degradation to in-process.
+``store``
+    The crash-safe on-disk result store: an append-only,
+    torn-write-tolerant JSONL memo of completed points, hydrated into
+    the result memo at server start — a restarted (even ``kill -9``'d)
+    server serves yesterday's rows as memo hits.
 ``server`` / ``client``
-    A local-socket JSONL protocol with concurrent clients, streamed
-    result rows and cancellation.
+    A JSONL protocol over ``AF_UNIX`` and (token-authenticated) TCP
+    with concurrent clients, streamed result rows, cancellation,
+    bounded admission with retry-after overload rejection, graceful
+    SIGTERM drain, and client-side reconnection with idempotent
+    resubmission (``resume=True``).  :class:`~.server.ServerProcess`
+    runs the server as a killable child for chaos/restart testing.
 
 The contract throughout: every row a client receives is bit-identical
 to calling the direct API yourself — memoized or freshly computed,
-fanned out or serial (the service runs the exact compile-once
+served from disk or fanned out (the service runs the exact compile-once
 ``measure``/``run_program`` code paths; tests assert equality field by
-field).
+field, across server restarts).
 """
 
 from repro.core.noc.service.cache import (  # noqa: F401
@@ -38,6 +47,8 @@ from repro.core.noc.service.client import (  # noqa: F401
     JobHandle,
     ServiceClient,
     ServiceError,
+    ServiceOverloaded,
+    ServiceTimeout,
 )
 from repro.core.noc.service.jobs import (  # noqa: F401
     PolicyCompareJob,
@@ -46,5 +57,15 @@ from repro.core.noc.service.jobs import (  # noqa: F401
     execute_workload,
     job_from_doc,
 )
-from repro.core.noc.service.scheduler import Scheduler  # noqa: F401
-from repro.core.noc.service.server import SimulationServer  # noqa: F401
+from repro.core.noc.service.scheduler import (  # noqa: F401
+    Scheduler,
+    SchedulerOverloaded,
+)
+from repro.core.noc.service.server import (  # noqa: F401
+    ServerProcess,
+    SimulationServer,
+)
+from repro.core.noc.service.store import (  # noqa: F401
+    ResultStore,
+    StoreMismatch,
+)

@@ -18,7 +18,10 @@ grids submitted by many clients overwhelmingly revisit the same
   keyed on ``workload_fingerprint + token``.  A memoized point is
   returned without any simulation; results are bit-identical by
   construction because the memo stores the exact row the engine
-  produced.
+  produced.  With a durable :class:`~.store.ResultStore` attached to
+  the scheduler, the memo hydrates from disk at start and every
+  completed row is written through — a restarted (even ``kill -9``'d)
+  server serves yesterday's points as memo hits.
 
 Both keep hit/miss/eviction counters; the scheduler's accounting is
 exact (asserted in tests): every requested point is classified as
@@ -92,17 +95,42 @@ class ResultMemo:
 
     Values are the exact JSON-ready row documents the engines produced,
     so serving from the memo is bit-identical to recomputing (the
-    engines are deterministic; the row *is* the result)."""
+    engines are deterministic; the row *is* the result).
+
+    :meth:`hydrate` pre-loads rows recovered from a durable
+    :class:`~.store.ResultStore`; hits on hydrated keys are counted
+    separately (``store_hits``) so restart-survival gates can assert
+    that previously completed points really were served from disk."""
 
     def __init__(self, capacity: int = 65536):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.stats = CacheStats()
+        self.store_hits = 0
+        self._from_store: set[str] = set()
         self._rows: OrderedDict[str, object] = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._rows)
+
+    def __contains__(self, key: str) -> bool:
+        """Membership peek that counts nothing (admission control must
+        not skew the hit/miss accounting)."""
+        return key in self._rows
+
+    def hydrate(self, rows: dict) -> None:
+        """Pre-load recovered ``{key: row}`` pairs (store hydration at
+        server start).  Counts nothing; hits on these keys increment
+        ``store_hits`` in addition to the ordinary hit counter."""
+        for key, row in rows.items():
+            self._rows[key] = row
+            self._rows.move_to_end(key)
+            self._from_store.add(key)
+            while len(self._rows) > self.capacity:
+                old, _ = self._rows.popitem(last=False)
+                self._from_store.discard(old)
+                self.stats.evictions += 1
 
     def get(self, key: str):
         """The memoized row for ``key`` or ``None``; counts a hit or a
@@ -110,6 +138,8 @@ class ResultMemo:
         row = self._rows.get(key)
         if row is not None:
             self.stats.hits += 1
+            if key in self._from_store:
+                self.store_hits += 1
             self._rows.move_to_end(key)
         else:
             self.stats.misses += 1
@@ -119,5 +149,6 @@ class ResultMemo:
         self._rows[key] = row
         self._rows.move_to_end(key)
         while len(self._rows) > self.capacity:
-            self._rows.popitem(last=False)
+            old, _ = self._rows.popitem(last=False)
+            self._from_store.discard(old)
             self.stats.evictions += 1

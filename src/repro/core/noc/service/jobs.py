@@ -52,6 +52,12 @@ JOB_KINDS = ("sweep", "policy_compare", "run_program")
 
 PROGRAM_TOKEN = "result"
 
+# Version tag of the point-key scheme below.  The durable result store
+# stamps this into its header (via ``fingerprint.store_schema_parts``):
+# bump it if :func:`point_key` ever changes shape, so stores written
+# under the old scheme are refused by name instead of silently missing.
+POINT_KEY_SCHEME = "workload_fingerprint:json_token/v1"
+
 
 # ---------------------------------------------------------------------------
 # Point/workload decomposition records (scheduler-facing).

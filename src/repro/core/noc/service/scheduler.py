@@ -46,11 +46,12 @@ from __future__ import annotations
 import dataclasses
 import multiprocessing as mp
 import os
+import signal
 import threading
 import time
 import warnings
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 from repro.core.noc.resilience.supervise import (
     Heartbeat,
@@ -59,6 +60,17 @@ from repro.core.noc.resilience.supervise import (
 )
 from repro.core.noc.service.cache import CacheStats, CompileCache, ResultMemo
 from repro.core.noc.service.jobs import execute_workload, job_from_doc
+from repro.core.noc.service.store import ResultStore
+
+
+class SchedulerOverloaded(RuntimeError):
+    """Admission refused: the queue is at its bound (or the scheduler is
+    draining).  ``retry_after_s`` is the server's estimate of when the
+    backlog will have drained enough to accept the job."""
+
+    def __init__(self, message: str, retry_after_s: float):
+        self.retry_after_s = retry_after_s
+        super().__init__(f"{message}; retry after {retry_after_s:.1f}s")
 
 
 def _worker_main(conn, heartbeat, cache_capacity: int) -> None:
@@ -156,19 +168,40 @@ class Scheduler:
     how many points of one workload ride a single dispatch — smaller
     chunks stream first rows sooner and parallelize one job across
     slots; larger ones amortize the compile further.
+
+    ``store`` (a :class:`~.store.ResultStore` or a path) makes the
+    result memo durable: the memo hydrates from disk at construction
+    and every completed row is written through, so a restarted — even
+    ``kill -9``'d — scheduler serves previously completed points as
+    memo hits, bit-identical to recomputing them.  ``max_queue_points``
+    bounds admission: a submission whose *fresh* points would push the
+    backlog past the bound is refused with
+    :class:`SchedulerOverloaded` (carrying a retry-after estimate from
+    the measured per-point wall), before any accounting or events.
+    :meth:`drain` is the graceful-shutdown half: stop admitting, finish
+    in-flight work, flush the store.
     """
 
     def __init__(self, workers: Optional[int] = None, chunk_tokens: int = 8,
                  memo_capacity: int = 65536, compile_capacity: int = 8,
                  supervise: Optional[SuperviseConfig] = None,
-                 telemetry=None):
+                 telemetry=None, store: Union[ResultStore, str, None] = None,
+                 max_queue_points: Optional[int] = None):
         if chunk_tokens < 1:
             raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
+        if max_queue_points is not None and max_queue_points < 1:
+            raise ValueError(
+                f"max_queue_points must be >= 1, got {max_queue_points}")
         self.cfg = supervise or SuperviseConfig()
         self.chunk_tokens = chunk_tokens
         self.compile_capacity = compile_capacity
+        self.max_queue_points = max_queue_points
         self.telemetry = telemetry
         self.memo = ResultMemo(memo_capacity)
+        self.store = (ResultStore(store) if isinstance(store, str)
+                      else store)
+        if self.store is not None:
+            self.memo.hydrate(self.store.rows())
         self._local_cache = CompileCache(compile_capacity)
         self._worker_compile = CacheStats()   # folded worker-side deltas
 
@@ -195,6 +228,20 @@ class Scheduler:
         # chunk (1-based), once — deterministic kill-recovery coverage.
         self.chaos_kill_after: Optional[int] = None
         self._dispatched = 0
+        # Chaos hook for the *server* side of the resilience story:
+        # SIGKILL this whole process right after the Nth completed chunk
+        # has been durably flushed to the store — the restart-survival
+        # harness (``server.ServerProcess``) runs the scheduler in a
+        # child process and sets this to die mid-stream, deterministically
+        # after N chunks' rows are on disk.
+        self.chaos_kill_server_after: Optional[int] = None
+        self._chunks_completed = 0
+
+        self._draining = False
+        # EMA of the per-point compute wall, feeding the retry-after
+        # hint of overload rejections (seeded pessimistically; real
+        # completions converge it within one chunk).
+        self._point_ema_s = 0.5
 
         self._t0 = time.monotonic()
         self._inline = workers == 0
@@ -233,11 +280,23 @@ class Scheduler:
 
     # -- submission API ----------------------------------------------------
 
+    def _backlog_points(self) -> int:
+        """Points queued or riding a busy slot (lock held)."""
+        queued = sum(len(c.keys) for q in self._queues.values() for c in q)
+        inflight = sum(len(w.chunk.keys) for w in self._workers
+                       if w.chunk is not None)
+        return queued + inflight
+
+    def _retry_after(self, backlog: int) -> float:
+        return min(60.0, max(0.1, backlog * self._point_ema_s))
+
     def submit(self, client: str, doc: dict, on_event: Callable) -> str:
         """Register one job; fires ``accepted`` (with the row layout),
         then ``rows`` events as points land, then exactly one of
         ``done`` / ``cancelled`` / ``error``.  Raises ``ValueError`` on
-        a malformed document — nothing is enqueued."""
+        a malformed document — nothing is enqueued — and
+        :class:`SchedulerOverloaded` (with a retry-after hint) when the
+        admission queue is at its bound or the scheduler is draining."""
         job_spec = job_from_doc(doc)
         workloads = job_spec.workloads()
         groups = []
@@ -249,6 +308,24 @@ class Scheduler:
                 points.append((len(points), wl, tok))
 
         with self._lock:
+            if self._draining:
+                raise SchedulerOverloaded(
+                    "service is draining and accepts no new jobs",
+                    self._retry_after(self._backlog_points()))
+            if self.max_queue_points is not None:
+                # Count only the points this job would actually add to
+                # the backlog — memoized and already-pending points cost
+                # nothing (a membership peek; no stats are skewed).
+                backlog = self._backlog_points()
+                fresh = sum(1 for _idx, wl, tok in points
+                            if wl.point_key(tok) not in self.memo
+                            and wl.point_key(tok) not in self._pending)
+                if backlog + fresh > self.max_queue_points:
+                    raise SchedulerOverloaded(
+                        f"admission queue full ({backlog} point(s) "
+                        f"backlogged + {fresh} new > bound "
+                        f"{self.max_queue_points})",
+                        self._retry_after(backlog))
             self._job_seq += 1
             job = _Job(f"j{self._job_seq}", client, job_spec.kind,
                        len(points), on_event, self._now())
@@ -333,6 +410,7 @@ class Scheduler:
                            "computed": self.points_computed,
                            "inflight_joins": self.inflight_joins,
                            "memo_hits": self.memo.stats.hits,
+                           "store_hits": self.memo.store_hits,
                            "hit_rate": (served / self.points_total
                                         if self.points_total else 0.0)},
                 "memo": self.memo.stats.to_doc(),
@@ -344,7 +422,36 @@ class Scheduler:
                 "degraded": self._degraded or self._inline,
                 "worker_respawns": self.worker_respawns,
                 "chunk_retries": self.chunk_retries,
+                "max_queue_points": self.max_queue_points,
+                "draining": self._draining,
+                "store": (self.store.stats() if self.store is not None
+                          else None),
             }
+
+    def drain(self, timeout: Optional[float] = None) -> dict:
+        """Graceful drain: stop admitting jobs, let every already
+        accepted job reach its terminal event (in-flight chunks finish;
+        their rows land in the store), flush the store, and return the
+        final :meth:`stats`.  Safe to call more than once; ``timeout``
+        bounds the wait (the drain still stops admission and flushes
+        whatever completed)."""
+        with self._lock:
+            self._draining = True
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            with self._lock:
+                active = any(j.state == "active"
+                             for j in self._jobs.values())
+            if not active:
+                break
+            if deadline is not None and time.monotonic() > deadline:
+                break
+            self._kick.set()
+            time.sleep(self.cfg.poll_interval_s)
+        if self.store is not None:
+            self.store.flush()
+        return self.stats()
 
     def close(self) -> None:
         """Stop the loop and tear the pool down (terminate/kill
@@ -365,6 +472,8 @@ class Scheduler:
         for w in self._workers:
             w.conn.close()
         self._workers = []
+        if self.store is not None:
+            self.store.close()
 
     def __enter__(self):
         return self
@@ -460,6 +569,14 @@ class Scheduler:
         self.telemetry.sample_counter(
             "service.cache_hit_rate", t,
             served / self.points_total if self.points_total else 0.0)
+        if self.store is not None:
+            # Store observability rides the same counter tracks; absent
+            # entirely on a store-less server so its sample stream (and
+            # the PR 9 Perfetto output) is untouched.
+            self.telemetry.sample_counter(
+                "service.store_hits", t, self.memo.store_hits)
+            self.telemetry.sample_counter(
+                "service.store_flushes", t, self.store.flushes)
 
     # -- dispatch loop -----------------------------------------------------
 
@@ -566,6 +683,7 @@ class Scheduler:
             chunk = self._next_chunk()
         if chunk is None:
             return False
+        t0 = time.monotonic()
         try:
             rows = execute_workload(chunk.doc, chunk.tokens,
                                     self._local_cache)
@@ -574,8 +692,13 @@ class Scheduler:
                 self._complete_error(chunk, f"{type(exc).__name__}: {exc}")
             return True
         with self._lock:
+            if rows:
+                self._note_point_wall((time.monotonic() - t0) / len(rows))
             self._complete_rows(chunk, rows)
         return True
+
+    def _note_point_wall(self, per_point_s: float) -> None:
+        self._point_ema_s += 0.3 * (per_point_s - self._point_ema_s)
 
     # -- completion / failure handling (lock held) -------------------------
 
@@ -588,6 +711,9 @@ class Scheduler:
             self._worker_compile.misses += delta[1]
             self._worker_compile.evictions += delta[2]
             if chunk is not None and chunk.id == chunk_id:
+                if rows:
+                    self._note_point_wall(
+                        (time.monotonic() - w.sent_t) / len(rows))
                 self._complete_rows(chunk, rows)
         elif kind == "error":
             _, chunk_id, message = msg
@@ -600,6 +726,8 @@ class Scheduler:
         finished = []
         for key, row in zip(chunk.keys, rows):
             self.memo.put(key, row)
+            if self.store is not None:
+                self.store.append(key, row)
             p = self._pending.pop(key, None)
             if p is None:
                 continue
@@ -616,6 +744,15 @@ class Scheduler:
             self._fire(job, {"event": "rows", "job": jid, "rows": pairs})
         for job in finished:
             self._finish(job, "done")
+        self._chunks_completed += 1
+        if (self.chaos_kill_server_after is not None
+                and self._chunks_completed >= self.chaos_kill_server_after):
+            # Die *after* the completed rows are durable: the restart
+            # gate asserts they come back as store hits, never as
+            # duplicate compute.
+            if self.store is not None:
+                self.store.flush()
+            os.kill(os.getpid(), signal.SIGKILL)
 
     def _complete_error(self, chunk: _Chunk, message: str) -> None:
         failed: list[_Job] = []

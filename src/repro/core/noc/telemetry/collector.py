@@ -203,8 +203,21 @@ class Collector:
 
     def sample_counter(self, name: str, t: float, value: float) -> None:
         """Record one sample of a named gauge (exported as a Perfetto
-        counter track)."""
+        counter track).  The service scheduler feeds its
+        ``service.queue_depth`` / ``service.slots_busy`` /
+        ``service.cache_hit_rate`` tracks — plus ``service.store_hits``
+        and ``service.store_flushes`` when a durable result store is
+        attached — through this path."""
         self.counter_samples.append((str(name), float(t), float(value)))
+
+    def last_counter(self, name: str):
+        """Latest sampled value of the named counter track, or ``None``
+        if it was never sampled (e.g. store tracks on a store-less
+        service)."""
+        for n, _t, value in reversed(self.counter_samples):
+            if n == name:
+                return value
+        return None
 
     def record_program(self, res) -> None:
         """Record per-op lifecycle spans from a

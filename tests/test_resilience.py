@@ -154,6 +154,40 @@ def test_snapshot_file_roundtrip(tmp_path):
     assert loaded.cycle == 30
 
 
+def test_run_with_autocheckpoint_bit_identical(tmp_path):
+    from repro.core.noc.resilience import run_with_autocheckpoint
+
+    ref = build_sim()
+    mk = ref.run(engine="heap")
+    path = str(tmp_path / "auto.ckpt.json")
+    sim, makespan = run_with_autocheckpoint(build_sim(), path,
+                                            interval=max(1, mk // 4))
+    assert makespan == mk
+    assert fingerprint(sim) == fingerprint(ref)
+    assert not (tmp_path / "auto.ckpt.json").exists()   # cleaned up
+
+
+def test_run_with_autocheckpoint_resumes_from_snapshot(tmp_path):
+    from repro.core.noc.resilience import run_with_autocheckpoint
+
+    ref = build_sim()
+    mk = ref.run(engine="heap")
+    interval = max(1, mk // 3)
+    # Simulate an interrupted run: one segment completed, snapshot on
+    # disk, process died before the next boundary.
+    first = build_sim()
+    assert first.run(engine="heap", stop_at=interval) == interval
+    path = tmp_path / "auto.ckpt.json"
+    checkpoint(first, interval).save(path)
+    # The rerun must resume from the snapshot (superseding the passed
+    # sim) and complete bit-identically to the uninterrupted run.
+    sim, makespan = run_with_autocheckpoint(build_sim(), str(path),
+                                            interval=interval)
+    assert makespan == mk
+    assert fingerprint(sim) == fingerprint(ref)
+    assert not path.exists()
+
+
 def test_snapshot_rejects_corruption():
     sim = build_sim()
     sim.run(engine="heap", stop_at=25)

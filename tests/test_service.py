@@ -333,16 +333,21 @@ GRID = dict(mesh=(4, 4), pattern="transpose",
             packets_per_node=2, seed=7)
 
 
-def test_three_concurrent_clients_bit_identical_and_hit_rate():
+@pytest.mark.parametrize("transport", ["unix", "tcp"])
+def test_three_concurrent_clients_bit_identical_and_hit_rate(transport):
     direct = saturation_sweep(Mesh2D(4, 4), "transpose", GRID["rates"],
                               packets_per_node=2, seed=7)
-    with SimulationServer(workers=2, chunk_tokens=3) as srv:
+    server_kw = (dict(tcp=("127.0.0.1", 0), token="s3cret")
+                 if transport == "tcp" else {})
+    with SimulationServer(workers=2, chunk_tokens=3, **server_kw) as srv:
+        addr = srv.path if transport == "unix" else srv.tcp_address
+        client_kw = {} if transport == "unix" else {"token": "s3cret"}
         results: dict[str, list] = {}
         errors: list = []
 
         def run(name):
             try:
-                with ServiceClient(srv.path) as cli:
+                with ServiceClient(addr, **client_kw) as cli:
                     results[name] = cli.submit_sweep(**GRID).sweep_points()
             except Exception as exc:  # noqa: BLE001
                 errors.append((name, exc))

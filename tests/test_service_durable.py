@@ -1,0 +1,387 @@
+"""Durable simulation service: crash-safe result store, TCP transport
+with shared-token auth, client retry/resume, bounded admission, drain.
+
+The load-bearing invariants:
+
+* the on-disk result store survives anything short of disk loss — torn
+  final lines are dropped and compacted away, duplicate keys resolve
+  last-write-wins, and a store written by a different code version is
+  refused with a message naming the differing component;
+* restart survival is *exact*: SIGKILL the server mid-stream, restart
+  it on the same store, and a resuming client completes with rows
+  bit-identical to the direct API and **zero duplicate compute**
+  (points completed before the kill come back as store hits — the
+  accounting ``hits + joins + computed == total`` holds across the
+  restart);
+* TCP connections are refused before any job parsing unless the first
+  line is the shared-token handshake;
+* nothing hangs: waits raise :class:`ServiceTimeout`, overload raises
+  :class:`ServiceOverloaded` with a retry-after hint, and a graceful
+  drain finishes in-flight jobs before the server exits.
+"""
+
+from __future__ import annotations
+
+import json
+import signal
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core.noc.resilience import SuperviseConfig
+from repro.core.noc.service import (
+    ResultStore,
+    SchedulerOverloaded,
+    ServerProcess,
+    ServiceClient,
+    ServiceError,
+    ServiceOverloaded,
+    ServiceTimeout,
+    SimulationServer,
+    StoreMismatch,
+)
+from repro.core.noc.service.scheduler import Scheduler
+from repro.core.noc.traffic.sweep import saturation_sweep
+from repro.core.topology import Mesh2D
+
+GRID = dict(mesh=(4, 4), pattern="transpose",
+            rates=[0.02, 0.04, 0.06, 0.08, 0.1, 0.12],
+            packets_per_node=2, seed=7)
+
+
+def _direct():
+    return saturation_sweep(Mesh2D(4, 4), "transpose", GRID["rates"],
+                            packets_per_node=2, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# Result store: torn writes, duplicates, version identity.
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    with ResultStore(path) as st:
+        st.append("a", {"v": 1.5})
+        st.append("b", {"v": [1, 2]})
+        assert "a" in st and len(st) == 2
+    st2 = ResultStore(path)
+    assert st2.rows() == {"a": {"v": 1.5}, "b": {"v": [1, 2]}}
+    assert st2.rows_loaded == 2
+    assert st2.torn_dropped == 0 and st2.duplicates_compacted == 0
+    st2.close()
+
+
+def test_store_torn_final_line_dropped_and_compacted(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    with ResultStore(path) as st:
+        st.append("a", {"v": 1})
+        st.append("b", {"v": 2})
+    with open(path, "a") as f:          # crash mid-append: a torn line
+        f.write('{"key": "c", "ro')
+    st2 = ResultStore(path)
+    assert st2.rows() == {"a": {"v": 1}, "b": {"v": 2}}
+    assert st2.torn_dropped == 1
+    st2.close()
+    st3 = ResultStore(path)             # compaction removed the damage
+    assert st3.torn_dropped == 0 and len(st3) == 2
+    st3.close()
+
+
+def test_store_duplicate_keys_last_write_wins(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    with ResultStore(path) as st:
+        st.append("a", {"v": 1})
+        st.append("a", {"v": 2})        # two lines on disk, one key
+    st2 = ResultStore(path)
+    assert st2.rows() == {"a": {"v": 2}}
+    assert st2.duplicates_compacted == 1
+    st2.close()
+    st3 = ResultStore(path)
+    assert st3.duplicates_compacted == 0    # compacted away
+    st3.close()
+
+
+def _rewrite_header(path: str, mutate) -> None:
+    with open(path) as f:
+        lines = f.read().split("\n")
+    header = json.loads(lines[0])
+    mutate(header)
+    lines[0] = json.dumps(header)
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+
+
+def test_store_version_mismatch_names_component(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    with ResultStore(path) as st:
+        st.append("a", {"v": 1})
+    _rewrite_header(path, lambda h: h["parts"].update(row_fields="0" * 64))
+    with pytest.raises(StoreMismatch, match="SweepPoint row fields"):
+        ResultStore(path)
+    _rewrite_header(
+        path, lambda h: h["parts"].update(params_fields="1" * 64))
+    with pytest.raises(StoreMismatch,
+                       match="NoCParams fields.*SweepPoint row fields"):
+        ResultStore(path)
+
+
+def test_store_predating_component_digests_refused(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    ResultStore(path).close()
+    _rewrite_header(path, lambda h: h.pop("parts"))
+    with pytest.raises(StoreMismatch, match="predates per-component"):
+        ResultStore(path)
+
+
+# ---------------------------------------------------------------------------
+# Warm restart: a fresh server on an existing store serves from disk.
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_server_on_existing_store_serves_store_hits(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    direct = _direct()
+    with SimulationServer(workers=0, chunk_tokens=3, store=path) as srv:
+        with ServiceClient(srv.path) as cli:
+            cold = cli.submit_sweep(**GRID).sweep_points()
+            cold_stats = cli.stats()
+    assert cold == direct
+    assert cold_stats["points"]["computed"] == 6
+    assert cold_stats["store"]["appends"] == 6
+
+    with SimulationServer(workers=0, chunk_tokens=3, store=path) as srv:
+        with ServiceClient(srv.path) as cli:
+            warm = cli.submit_sweep(**GRID).sweep_points()
+            st = cli.stats()["points"]
+    assert warm == direct                       # bit-identical from disk
+    assert st["store_hits"] == 6
+    assert st["computed"] == 0
+    assert (st["memo_hits"] + st["inflight_joins"]
+            + st["computed"]) == st["total"] == 6
+
+
+# ---------------------------------------------------------------------------
+# The centerpiece: SIGKILL mid-stream, restart, resume — zero duplicate
+# compute.
+# ---------------------------------------------------------------------------
+
+
+def test_kill9_restart_resume_bit_identical_zero_duplicate(tmp_path):
+    direct = _direct()
+    sock = str(tmp_path / "svc.sock")
+    store = str(tmp_path / "rs.jsonl")
+    # workers=0 + chunk_tokens=1: points complete one at a time, so
+    # chaos_kill_server_after=2 dies with exactly 2 rows durable.
+    srv1 = ServerProcess(sock, store=store, workers=0, chunk_tokens=1,
+                         chaos_kill_server_after=2)
+    result: dict = {}
+    errors: list = []
+
+    def run_client():
+        try:
+            with ServiceClient(sock, resume=True, max_retries=60,
+                               backoff_base_s=0.05,
+                               backoff_cap_s=0.25) as cli:
+                h = cli.submit_sweep(**GRID)
+                result["pts"] = h.sweep_points()
+                result["stats"] = cli.stats()
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    t = threading.Thread(target=run_client)
+    t.start()
+    code = srv1.wait(timeout=180)               # the chaos SIGKILL fires
+    assert code == -signal.SIGKILL
+    assert t.is_alive()                         # client is retrying, not dead
+
+    with ServerProcess(sock, store=store, workers=0, chunk_tokens=1):
+        t.join(timeout=180)
+        assert not t.is_alive()
+    assert not errors, errors
+    assert result["pts"] == direct              # bit-identical across restart
+
+    st = result["stats"]["points"]
+    assert st["total"] == 6
+    assert st["store_hits"] == 2                # pre-kill rows, from disk
+    assert st["computed"] == 4                  # zero duplicate compute
+    assert (st["memo_hits"] + st["inflight_joins"]
+            + st["computed"]) == st["total"]
+    with ResultStore(store) as final:           # every point is now durable
+        assert len(final) == 6
+
+
+# ---------------------------------------------------------------------------
+# TCP transport and auth.
+# ---------------------------------------------------------------------------
+
+
+def test_unauthenticated_tcp_refused_before_job_parsing():
+    with SimulationServer(workers=0, tcp=("127.0.0.1", 0),
+                          token="s3cret") as srv:
+        host, port = srv.tcp_address
+        raw = socket.create_connection((host, port), timeout=10)
+        try:
+            raw.sendall(b'{"op": "submit", "req": "r1", "job": {}}\n')
+            reply = json.loads(raw.recv(65536).split(b"\n", 1)[0])
+            assert reply["event"] == "auth_error"
+            assert raw.recv(65536) == b""       # connection closed on us
+        finally:
+            raw.close()
+        with pytest.raises(ServiceError, match="auth"):
+            ServiceClient((host, port), token="wr0ng")
+        with ServiceClient(srv.path) as cli:    # nothing was ever parsed
+            assert cli.stats()["jobs"]["submitted"] == 0
+
+
+def test_tcp_requires_token_on_both_ends():
+    with pytest.raises(ValueError, match="token"):
+        SimulationServer(workers=0, tcp=("127.0.0.1", 0))
+    with pytest.raises(ValueError, match="token"):
+        ServiceClient(("127.0.0.1", 1))
+
+
+# ---------------------------------------------------------------------------
+# Timeouts, overload, drain.
+# ---------------------------------------------------------------------------
+
+
+def test_wait_timeout_raises_service_timeout_not_hang():
+    with SimulationServer(workers=0, chunk_tokens=1) as srv:
+        with ServiceClient(srv.path) as cli:
+            h = cli.submit_sweep(**GRID)
+            with pytest.raises(ServiceTimeout) as ei:
+                h.wait(timeout=0.01)
+            assert isinstance(ei.value, TimeoutError)   # old handlers work
+            assert h.wait(timeout=180) == "done"
+
+
+def test_admission_bound_rejects_then_accepts_warm(tmp_path):
+    direct = _direct()
+    with SimulationServer(workers=0, chunk_tokens=1,
+                          max_queue_points=4) as srv:
+        with ServiceClient(srv.path) as cli:
+            h = cli.submit_sweep(**GRID)        # 6 fresh points > bound 4
+            with pytest.raises(ServiceOverloaded) as ei:
+                h.collect()
+            assert ei.value.retry_after_s > 0
+            assert "admission queue full" in str(ei.value)
+
+            small = dict(GRID, rates=GRID["rates"][:2])
+            assert len(cli.submit_sweep(**small).collect()) == 2
+
+            # Warm resubmission: 2 of 6 points are memoized now, so only
+            # 4 are fresh — within the bound, accepted, bit-identical.
+            assert cli.submit_sweep(**GRID).sweep_points() == direct
+
+
+def test_scheduler_overload_message_has_retry_hint():
+    from repro.core.noc.service import SweepJob
+
+    with Scheduler(workers=0, max_queue_points=1) as sched:
+        doc = SweepJob(**GRID).to_doc()
+        with pytest.raises(SchedulerOverloaded) as ei:
+            sched.submit("c1", doc, lambda e: None)
+        assert "retry after" in str(ei.value)
+        assert ei.value.retry_after_s > 0
+
+
+def test_drain_finishes_inflight_rejects_new_flushes_store(tmp_path):
+    path = str(tmp_path / "rs.jsonl")
+    with SimulationServer(workers=0, chunk_tokens=1, store=path) as srv:
+        with ServiceClient(srv.path) as cli:
+            h = cli.submit_sweep(**GRID)
+            assert h.rows_total == 6            # accepted before we drain
+            stats = srv.drain(timeout=180)
+            assert stats["draining"] is True
+            assert stats["jobs"]["done"] == 1   # in-flight job completed
+            assert h.wait(timeout=30) == "done"
+            h2 = cli.submit_sweep(**GRID)       # existing conn, new job
+            with pytest.raises(ServiceOverloaded, match="draining"):
+                h2.collect()
+    with ResultStore(path) as st:
+        assert len(st) == 6
+
+
+def test_sigterm_drains_flushes_and_exits_zero(tmp_path):
+    sock = str(tmp_path / "svc.sock")
+    store = str(tmp_path / "rs.jsonl")
+    with ServerProcess(sock, store=store, workers=0, chunk_tokens=2) as srv:
+        with ServiceClient(sock) as cli:
+            assert cli.submit_sweep(**GRID).wait(timeout=180) == "done"
+        srv.terminate()
+        assert srv.wait(timeout=30) == 0
+    with ResultStore(store) as st:
+        assert len(st) == 6
+
+
+# ---------------------------------------------------------------------------
+# Client resilience details.
+# ---------------------------------------------------------------------------
+
+
+def test_resume_client_event_seq_is_monotonic_and_complete():
+    with SimulationServer(workers=0, chunk_tokens=1) as srv:
+        with ServiceClient(srv.path, resume=True) as cli:
+            h = cli.submit_sweep(**GRID)
+            assert h.sweep_points() == _direct()
+            # accepted(0) + one rows event per point (1..6) + done(7).
+            assert h.last_seq == 7
+
+
+def test_resume_client_can_start_before_server(tmp_path):
+    sock = str(tmp_path / "late.sock")
+    holder: dict = {}
+
+    def start_later():
+        time.sleep(0.4)
+        holder["srv"] = SimulationServer(path=sock, workers=0)
+
+    t = threading.Thread(target=start_later)
+    t.start()
+    try:
+        with ServiceClient(sock, resume=True, max_retries=40,
+                           backoff_base_s=0.05, backoff_cap_s=0.25) as cli:
+            small = dict(GRID, rates=GRID["rates"][:1])
+            assert len(cli.submit_sweep(**small).collect()) == 1
+    finally:
+        t.join(timeout=10)
+        holder["srv"].close()
+
+
+def test_nonresuming_client_fails_fast_on_missing_server(tmp_path):
+    with pytest.raises(OSError):
+        ServiceClient(str(tmp_path / "nobody-home.sock"))
+
+
+# ---------------------------------------------------------------------------
+# Supervision: reap escalation deadlines are configurable end to end.
+# ---------------------------------------------------------------------------
+
+
+def _sigterm_immune_worker(conn, heartbeat, cache_capacity):
+    """A worker that ignores SIGTERM and never reads its pipe — only the
+    reap escalation's SIGKILL can take it down."""
+    signal.signal(signal.SIGTERM, signal.SIG_IGN)
+    while True:
+        time.sleep(60)
+
+
+def test_reap_escalation_kills_sigterm_immune_worker(monkeypatch):
+    from repro.core.noc.service import scheduler as sched_mod
+
+    monkeypatch.setattr(sched_mod, "_worker_main", _sigterm_immune_worker)
+    cfg = SuperviseConfig(join_timeout_s=0.2, term_timeout_s=0.2)
+    t0 = time.perf_counter()
+    srv = SimulationServer(workers=1, supervise=cfg)
+    procs = [w.proc for w in srv.scheduler._workers]
+    assert procs and all(p.is_alive() for p in procs)
+    srv.close()
+    elapsed = time.perf_counter() - t0
+    assert all(not p.is_alive() for p in procs)
+    # join(0.2) + ignored SIGTERM + join(0.2) + SIGKILL: the short
+    # deadlines keep teardown fast; the 5s default would too, but this
+    # asserts the knobs actually reach reap().
+    assert elapsed < 10.0
